@@ -1,0 +1,78 @@
+"""Render the §Roofline table from reports/dryrun_cells.jsonl."""
+from __future__ import annotations
+
+import json
+import os
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun_cells.jsonl")
+
+
+def load_cells(path: str = REPORT, mesh: str | None = None, sp: str | None = None) -> list[dict]:
+    best: dict = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if not r.get("ok"):
+                continue
+            if mesh and r["mesh"] != mesh:
+                continue
+            if sp is not None and r.get("sp", "off") != sp:
+                continue
+            best[(r["arch"], r["shape"], r["mesh"], r.get("sp", "off"))] = r
+    return sorted(best.values(), key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+
+def dominant_fix(r: dict) -> str:
+    b = r["roofline"]["bottleneck"]
+    mode = r["mode"]
+    if b == "collective":
+        if mode == "train":
+            return "raise persist/buffer or drop TP ARs (SP / dp-only sharding)"
+        return "persist weights (skip per-layer gather) / batch more requests"
+    if b == "memory":
+        if mode == "decode":
+            return "quantize or window the KV cache; fuse cache read into attention"
+        return "fuse optimizer (single HBM pass) / larger microbatches"
+    return "already compute-bound: raise MXU utilization (larger tiles)"
+
+
+def table(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | bottleneck | "
+           "MODEL/HLO flops | what moves the dominant term |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in cells:
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['t_compute_s']:.3f} | {rl['t_memory_s']:.3f} | {rl['t_collective_s']:.3f} "
+            f"| **{rl['bottleneck']}** | {rl['useful_flops_ratio']:.2f} "
+            f"| {dominant_fix(r)} |"
+        )
+    return "\n".join(rows)
+
+
+def summary(cells: list[dict]) -> dict:
+    out = {"cells": len(cells), "by_bottleneck": {}}
+    for r in cells:
+        b = r["roofline"]["bottleneck"]
+        out["by_bottleneck"][b] = out["by_bottleneck"].get(b, 0) + 1
+    # roofline fraction: max-term / sum-of-terms ~ how close the dominant
+    # term is to being the whole step (1.0 = perfectly overlapped elsewhere)
+    return out
+
+
+def main():
+    cells = load_cells()
+    print(table(cells))
+    print()
+    print(summary(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Benchmark harness: one section per paper table/figure + the TPU roofline.
+
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run --only table2,fig5
+
+Prints ``name,value,...`` CSV rows per section (machine-parsable) plus the
+roofline markdown table sourced from reports/dryrun_cells.jsonl.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _csv(section: str, rows: list[dict]) -> None:
+    if not rows:
+        print(f"{section},EMPTY")
+        return
+    cols = list(rows[0].keys())
+    print(f"# {section}")
+    print(",".join(["section"] + cols))
+    for r in rows:
+        print(",".join([section] + [str(r.get(c, "")) for c in cols]))
+    print()
+
+
+def bench_table2():
+    from benchmarks.paper_tables import table2
+
+    _csv("table2_max_trainable_B", table2())
+
+
+def bench_fig3():
+    from benchmarks.paper_tables import fig3_throughput
+
+    _csv("fig3_throughput_tokens_per_s", fig3_throughput())
+
+
+def bench_fig5():
+    from benchmarks.paper_tables import fig5_ablation
+
+    _csv("fig5_ablation_slowdown_x", fig5_ablation())
+
+
+def bench_table3():
+    from benchmarks.paper_tables import table3_offload
+
+    _csv("table3_offload", table3_offload())
+
+
+def bench_table4():
+    from benchmarks.paper_tables import table4_configs
+
+    _csv("table4_searched_configs", table4_configs())
+
+
+def bench_fig6():
+    from benchmarks.estimator_fidelity import memory_fidelity, runtime_fidelity
+
+    _csv("fig6_memory_fidelity", memory_fidelity())
+    _csv("fig6_runtime_fidelity", runtime_fidelity())
+
+
+def bench_search_overhead():
+    """§5.3.4: profiling + search overhead."""
+    from repro.configs import get_config, TRAIN_4K
+    from repro.core import SINGLE_POD, TPU_V5E, build_workload, search
+
+    rows = []
+    for arch in ("mistral-7b", "gpt2-20b", "llama3-405b"):
+        t0 = time.time()
+        w = build_workload(get_config(arch), TRAIN_4K, SINGLE_POD, TPU_V5E)
+        t_prof = time.time() - t0
+        res = search(w, sp="off")
+        rows.append({
+            "model": arch,
+            "profile_s": round(t_prof, 3),
+            "search_s": round(res.search_seconds, 3),
+            "evaluated": res.evaluated,
+        })
+    _csv("search_overhead", rows)
+
+
+def bench_roofline():
+    from benchmarks.roofline_table import load_cells, summary, table
+
+    cells = load_cells()
+    print("# roofline (from reports/dryrun_cells.jsonl)")
+    print(table(cells))
+    print(summary(cells))
+    print()
+
+
+def bench_kernels():
+    """Microbenchmark the Pallas kernels in interpret mode vs jnp oracle
+    (numbers are CPU-interpret timings — correctness artifacts, not perf)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as R
+    from repro.kernels.flash_attention import flash_attention
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 4, 256, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 4, 256, 64), jnp.float32)
+    t0 = time.time()
+    out = flash_attention(q, k, v, interpret=True)
+    t_kernel = (time.time() - t0) * 1e6
+    t0 = time.time()
+    ref = R.flash_attention_ref(q, k, v)
+    t_ref = (time.time() - t0) * 1e6
+    err = float(jnp.abs(out - ref).max())
+    _csv("kernels", [{
+        "name": "flash_attention_fwd",
+        "us_per_call_interpret": round(t_kernel),
+        "us_per_call_ref": round(t_ref),
+        "max_abs_err": err,
+    }])
+
+
+SECTIONS = {
+    "table2": bench_table2,
+    "fig3": bench_fig3,
+    "fig5": bench_fig5,
+    "table3": bench_table3,
+    "table4": bench_table4,
+    "fig6": bench_fig6,
+    "search": bench_search_overhead,
+    "roofline": bench_roofline,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated section names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SECTIONS)
+    for name in names:
+        t0 = time.time()
+        try:
+            SECTIONS[name]()
+        except Exception as e:  # keep the harness robust: report and continue
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+            print(f"{name},ERROR,{type(e).__name__}")
+        print(f"# [{name} took {time.time()-t0:.1f}s]\n", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

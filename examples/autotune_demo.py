@@ -1,0 +1,38 @@
+"""ProTrain's automatic memory management across models and hardware —
+reproduces the shape of the paper's Table 4 analysis: how the searched
+configuration responds to batch size, hardware, and model size.
+
+    PYTHONPATH=src python examples/autotune_demo.py
+"""
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.configs.paper_models import PAPER_MODELS
+from repro.core import build_workload, search
+from repro.core.hardware import A100_80G, RTX_3090, TPU_V5E, MeshSpec, SINGLE_POD
+
+GPU4 = MeshSpec((4,), ("data",))
+
+print(f"{'model':12s} {'batch':>5s} {'hardware':10s} | {'searched configuration':50s} | modeled tok/s")
+print("-" * 110)
+rows = [
+    ("gpt2-1b", 8, RTX_3090), ("gpt2-1b", 64, RTX_3090), ("gpt2-1b", 64, A100_80G),
+    ("gpt2-10b", 8, RTX_3090), ("gpt2-10b", 8, A100_80G),
+    ("mistral-7b", 64, A100_80G), ("llama-13b", 64, A100_80G),
+]
+for name, batch, hw in rows:
+    cfg = PAPER_MODELS[name]
+    shape = ShapeConfig("paper", 1024, batch, "train")
+    w = build_workload(cfg, shape, GPU4, hw)
+    res = search(w)
+    print(f"{name:12s} {batch:5d} {hw.name:10s} | {res.plan.describe():50s} | "
+          f"{res.runtime.tokens_per_second:>10,.0f}")
+
+print()
+print("TPU v5e pod (256 chips), assigned architectures:")
+for arch in ("llama3-405b", "mixtral-8x22b", "jamba-1.5-large-398b", "mamba2-130m"):
+    cfg = get_config(arch)
+    shape = ShapeConfig("train_4k", 4096, 256, "train")
+    w = build_workload(cfg, shape, SINGLE_POD, TPU_V5E)
+    res = search(w, sp="auto")
+    print(f"{arch:22s} | {res.plan.describe():55s} | {res.runtime.tokens_per_second:>10,.0f} tok/s"
+          f" | feasible={res.feasible}")

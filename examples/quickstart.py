@@ -1,0 +1,44 @@
+"""Quickstart: ProTrain-style automatic memory management in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. pick an architecture config,
+2. let the planner search {n_persist, n_buffer, n_host, n_swap, n_checkpoint}
+   for the target hardware,
+3. build the plan-realized train step and run a few steps.
+"""
+import jax
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import TPU_V5E, SINGLE_POD, build_workload, search
+from repro.core.plan import fully_resident_plan
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.launch.mesh import make_local_mesh
+from repro.train.step_builder import build_train_step
+
+# --- 1. the model ----------------------------------------------------------
+cfg = get_config("llama3-405b")
+
+# --- 2. what would ProTrain do on a real v5e pod? ---------------------------
+shape = ShapeConfig("train", seq_len=4096, global_batch=256, mode="train")
+workload = build_workload(cfg, shape, SINGLE_POD, TPU_V5E)
+result = search(workload, sp="auto")
+print(f"405B plan on 256 x v5e : {result.plan.describe()}")
+print(f"  modeled step time    : {result.runtime.t_iteration:.2f}s "
+      f"({result.runtime.tokens_per_second:,.0f} tok/s)")
+print(f"  modeled peak memory  : {result.memory.peak/1e9:.2f} GB / {TPU_V5E.hbm_bytes/1e9:.0f} GB HBM")
+print(f"  search               : {result.evaluated} cells in {result.search_seconds*1e3:.0f} ms")
+
+# --- 3. actually train the reduced variant locally --------------------------
+tiny = reduced(cfg)
+local_shape = ShapeConfig("local", seq_len=128, global_batch=4, mode="train")
+mesh = make_local_mesh()
+plan = fully_resident_plan(n_chunks=4, n_blocks=2)  # tiny model: keep it simple
+art = build_train_step(tiny, plan, mesh, local_shape)
+state = art.init(jax.random.PRNGKey(0))
+pipe = SyntheticTokenPipeline(tiny, local_shape, seed=0)
+step = jax.jit(art.fn, donate_argnums=(0,))
+for i in range(10):
+    state, metrics = step(state, pipe.next_sync())
+    print(f"step {i}: loss={float(metrics['loss']):.4f}")

@@ -1,0 +1,53 @@
+"""Batched serving demo: prefill a prompt batch, then decode with the
+plan-sharded KV cache — the serve-side of the framework.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core.plan import MemoryPlan
+from repro.launch.mesh import make_local_mesh
+from repro.models import kvcache as KV
+from repro.models import model as M
+from repro.train.step_builder import build_decode_step
+
+cfg = reduced(get_config("mixtral-8x22b"))
+B, PROMPT, GEN = 4, 32, 32
+mesh = make_local_mesh()
+plan = MemoryPlan(n_chunks=4, n_blocks=2, n_persist=4)
+shape = ShapeConfig("serve", PROMPT + GEN, B, "decode")
+
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+# serving layout: canonical stacked blocks (same tree the decode step expects)
+art = build_decode_step(cfg, plan, mesh, shape)
+step = jax.jit(art.fn, donate_argnums=(0,))
+
+prompt = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0, cfg.vocab_size)
+cache = KV.init_cache(cfg, B, PROMPT + GEN)
+state = {"params": params, "cache": cache}
+
+# prefill = teacher-forced decode over the prompt (simple and correct; a
+# production server would use build_prefill_step to batch this)
+t0 = time.time()
+tok = prompt[:, :1]
+for t in range(PROMPT):
+    state, nxt = step(state, {"tokens": prompt[:, t:t + 1], "pos": jnp.int32(t)})
+print(f"prefill {PROMPT} tokens x {B} seqs: {time.time()-t0:.2f}s")
+
+t0 = time.time()
+generated = [nxt[:, None]]
+tok = nxt[:, None]
+for t in range(PROMPT, PROMPT + GEN - 1):
+    state, nxt = step(state, {"tokens": tok, "pos": jnp.int32(t)})
+    tok = nxt[:, None]
+    generated.append(tok)
+out = jnp.concatenate(generated, axis=1)
+dt = time.time() - t0
+print(f"decoded {GEN} tokens x {B} seqs in {dt:.2f}s "
+      f"({B * GEN / dt:.1f} tok/s on CPU interpret)")
+print("sample token ids:", out[0, :16].tolist())

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see archs.py for the exact values)."""
+from repro.configs.archs import JAMBA_1_5_LARGE_398B as CONFIG
+
+__all__ = ["CONFIG"]

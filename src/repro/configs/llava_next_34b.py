@@ -1,0 +1,4 @@
+"""Assigned architecture config (see archs.py for the exact values)."""
+from repro.configs.archs import LLAVA_NEXT_34B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see archs.py for the exact values)."""
+from repro.configs.archs import MAMBA2_130M as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see archs.py for the exact values)."""
+from repro.configs.archs import NEMOTRON_4_340B as CONFIG
+
+__all__ = ["CONFIG"]

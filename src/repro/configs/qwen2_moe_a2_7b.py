@@ -1,0 +1,4 @@
+"""Assigned architecture config (see archs.py for the exact values)."""
+from repro.configs.archs import QWEN2_MOE_A2_7B as CONFIG
+
+__all__ = ["CONFIG"]

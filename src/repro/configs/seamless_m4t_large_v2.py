@@ -1,0 +1,4 @@
+"""Assigned architecture config (see archs.py for the exact values)."""
+from repro.configs.archs import SEAMLESS_M4T_LARGE_V2 as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,12 @@
+"""ProTrain core: structured memory strategies, profiler, cost models, tuner."""
+from repro.core.autotuner import SearchResult, exhaustive_search, search
+from repro.core.chunks import ChunkInfo, chunk_inventory, chunk_size_search
+from repro.core.cost_model import (
+    Workload,
+    build_workload,
+    estimate_memory,
+    estimate_runtime,
+)
+from repro.core.hardware import HARDWARE, MULTI_POD, SINGLE_POD, TPU_V5E, HardwareSpec, MeshSpec
+from repro.core.plan import MemoryPlan, fsdp_style_plan, fully_resident_plan
+from repro.core.profiler import BlockProfile, profile_fn, profile_superblock

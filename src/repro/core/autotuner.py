@@ -1,0 +1,224 @@
+"""Automatic memory management (§3.3): constrained configuration search.
+
+    min_{configs} T_iteration   s.t.   M_peak < M_capacity        (Eq. 1)
+
+over configs = {n_persist, n_buffer, n_swap, n_checkpoint} (+ TPU extensions
+n_host, microbatch). Pruning mirrors the paper:
+
+  * n_swap is restricted to the bandwidth-feasible set (swap must drain within
+    the forward compute window — the N_interval constraint);
+  * memory is monotone in n_persist/n_buffer (and anti-monotone in n_host),
+    so instead of enumerating we binary-search the largest feasible values —
+    the monotone equivalent of "evaluate in increasing memory order and
+    discard over-capacity configs early";
+  * runtime is monotone-decreasing in n_persist and n_buffer at fixed
+    (n_swap, n_checkpoint, microbatch), so maximizing them is optimal per cell.
+
+The search is exhaustive over the remaining axes. All evaluations are analytic
+(cost_model) — no training iterations are run, matching the paper's 0.06 s
+search overhead claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+from repro.core.cost_model import (
+    MemoryBreakdown,
+    RuntimeBreakdown,
+    Workload,
+    estimate_memory,
+    estimate_runtime,
+)
+from repro.core.plan import MemoryPlan
+
+
+@dataclasses.dataclass
+class SearchResult:
+    plan: MemoryPlan
+    runtime: RuntimeBreakdown
+    memory: MemoryBreakdown
+    evaluated: int
+    search_seconds: float
+    feasible: bool
+
+
+def _fits(w: Workload, plan: MemoryPlan, capacity: float) -> bool:
+    return estimate_memory(w, plan).peak < capacity
+
+
+def _max_feasible(lo: int, hi: int, pred) -> int:
+    """Largest v in [lo, hi] with pred(v), assuming pred monotone-decreasing.
+    Returns lo-1 if none."""
+    if not pred(lo):
+        return lo - 1
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if pred(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def _grid(n: int, max_points: int = 9) -> list[int]:
+    if n <= max_points:
+        return list(range(n + 1))
+    step = max(1, n // (max_points - 1))
+    vals = sorted(set(list(range(0, n + 1, step)) + [n]))
+    return vals
+
+
+def search(
+    w: Workload,
+    capacity_bytes: float | None = None,
+    *,
+    microbatches: tuple[int, ...] = (1, 2, 4, 8, 16),
+    allow_host: bool = True,
+    allow_swap: bool = True,
+    max_checkpoint_points: int = 9,
+    sp: str = "off",  # "off" (paper-faithful) | "on" | "auto" (beyond-paper)
+    dp: str = "off",  # "off" | "auto": also consider dp_only (model axis -> data)
+) -> SearchResult:
+    """Find the fastest plan fitting in per-chip memory."""
+    t0 = time.time()
+    capacity = capacity_bytes if capacity_bytes is not None else w.hw.hbm_bytes * 0.92
+    nc, nb = w.n_chunks, w.n_blocks
+    best: SearchResult | None = None
+    evaluated = 0
+
+    sp_vals = {"off": (False,), "on": (True,), "auto": (False, True)}[sp]
+    dp_vals = {"off": (False,), "on": (True,), "auto": (False, True)}[dp]
+
+    def dp_view(wl: Workload) -> Workload:
+        """Evaluate dp_only plans under a mesh where the model axis has been
+        folded into the data axis (tp=1, zero=n_chips_per_pod_axis)."""
+        from repro.core.hardware import MeshSpec
+
+        m = wl.mesh
+        if "pod" in m.axes:
+            new = MeshSpec((m.axis_size("pod"), m.n_chips // m.axis_size("pod")),
+                           ("pod", "data"))
+        else:
+            new = MeshSpec((m.n_chips,), ("data",))
+        return dataclasses.replace(wl, mesh=new)
+
+    for use_dp in dp_vals:
+        wl = dp_view(w) if use_dp else w
+        if use_dp and w.shape.global_batch % wl.mesh.zero_degree != 0:
+            continue  # batch cannot shard over every chip
+        seqs = wl.seqs_per_device
+        ubs = [m for m in microbatches if seqs / m >= 1 and (seqs / m) % 1 == 0] or [1]
+        best, evaluated = _search_inner(
+            wl, capacity, ubs, sp_vals, use_dp, allow_host, allow_swap,
+            max_checkpoint_points, best, evaluated,
+        )
+    w_final = w
+    if best is None:
+        # nothing fits: report the minimal-footprint plan as infeasible
+        plan = MemoryPlan(
+            nc, nb, n_host=nc if allow_host else 0,
+            n_checkpoint=nb, n_swap=0, microbatch=1,
+        )
+        best = SearchResult(
+            plan, estimate_runtime(w, plan), estimate_memory(w, plan), evaluated, 0.0, False
+        )
+    best.search_seconds = time.time() - t0
+    best.evaluated = evaluated
+    return best
+
+
+def _search_inner(w, capacity, ubs, sp_vals, use_dp, allow_host, allow_swap,
+                  max_checkpoint_points, best, evaluated):
+    nc, nb = w.n_chunks, w.n_blocks
+    for ub, use_sp in itertools.product(ubs, sp_vals):
+        # n_swap feasible set (paper: bounded by N_interval & bandwidth)
+        swap_vals = [0]
+        if allow_swap:
+            for ns in _grid(nb, 5):
+                if ns == 0:
+                    continue
+                probe = MemoryPlan(nc, nb, n_swap=ns, microbatch=ub,
+                                   seq_shard_acts=use_sp, dp_only=use_dp)
+                if estimate_runtime(w, probe).swap_feasible:
+                    swap_vals.append(ns)
+        for n_swap in swap_vals:
+            for n_ckpt in _grid(nb - n_swap, max_checkpoint_points):
+              for cg in ((1,) if n_ckpt == 0 else (1, 2, 4)):
+               for hp in (True, False):  # full host offload vs ZeRO-Offload split
+                evaluated += 1
+
+                def mk(n_persist=0, n_buffer=0, n_host=0):
+                    return MemoryPlan(
+                        nc, nb,
+                        n_persist=n_persist, n_buffer=n_buffer, n_host=n_host,
+                        n_swap=n_swap, n_checkpoint=n_ckpt, microbatch=ub,
+                        seq_shard_acts=use_sp, dp_only=use_dp, ckpt_group=cg,
+                        host_params=hp,
+                    )
+
+                # smallest-footprint config in this cell
+                if not _fits(w, mk(), capacity):
+                    if not allow_host:
+                        continue
+                    n_host = _max_feasible(1, nc, lambda v: not _fits(w, mk(n_host=v), capacity))
+                    n_host = min(n_host + 1, nc)
+                    if not _fits(w, mk(n_host=n_host), capacity):
+                        continue  # cell infeasible even fully host-offloaded
+                else:
+                    n_host = 0
+                # maximize persistence, then buffering (monotone in memory)
+                n_persist = _max_feasible(
+                    0, nc - n_host, lambda v: _fits(w, mk(n_persist=v, n_host=n_host), capacity)
+                )
+                n_persist = max(n_persist, 0)
+                n_buffer = _max_feasible(
+                    0,
+                    nc - n_persist - n_host,
+                    lambda v: _fits(w, mk(n_persist=n_persist, n_buffer=v, n_host=n_host), capacity),
+                )
+                n_buffer = max(n_buffer, 0)
+                plan = mk(n_persist=n_persist, n_buffer=n_buffer, n_host=n_host)
+                rt = estimate_runtime(w, plan)
+                mem = estimate_memory(w, plan)
+                if mem.peak >= capacity:
+                    continue
+                cand = SearchResult(plan, rt, mem, evaluated, 0.0, True)
+                if best is None or rt.t_iteration < best.runtime.t_iteration:
+                    best = cand
+    return best, evaluated
+
+
+def exhaustive_search(w: Workload, capacity_bytes: float, max_n: int = 6) -> SearchResult:
+    """Brute force over the full 4-tuple (tests: validates the pruned search)."""
+    t0 = time.time()
+    nc, nb = w.n_chunks, w.n_blocks
+    assert nc <= max_n + 2 and nb <= max_n + 2, "exhaustive search is for tiny models"
+    best = None
+    evaluated = 0
+    for np_, nh in itertools.product(range(nc + 1), range(nc + 1)):
+        if np_ + nh > nc:
+            continue
+        for nbuf in range(nc - np_ - nh + 1):
+            for ns, nk in itertools.product(range(nb + 1), range(nb + 1)):
+                if ns + nk > nb:
+                    continue
+                plan = MemoryPlan(nc, nb, n_persist=np_, n_buffer=nbuf, n_host=nh,
+                                  n_swap=ns, n_checkpoint=nk)
+                evaluated += 1
+                mem = estimate_memory(w, plan)
+                if mem.peak >= capacity_bytes:
+                    continue
+                rt = estimate_runtime(w, plan)
+                if not rt.swap_feasible:
+                    continue
+                if best is None or rt.t_iteration < best.runtime.t_iteration:
+                    best = SearchResult(plan, rt, mem, evaluated, 0.0, True)
+    if best is None:
+        plan = MemoryPlan(nc, nb, n_host=nc, n_checkpoint=nb)
+        best = SearchResult(plan, estimate_runtime(w, plan), estimate_memory(w, plan),
+                            evaluated, 0.0, False)
+    best.search_seconds = time.time() - t0
+    best.evaluated = evaluated
+    return best

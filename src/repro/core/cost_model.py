@@ -1,0 +1,460 @@
+"""Runtime + peak-memory cost models (paper Appendix A), TPU-adapted.
+
+Both models are functions of a ``MemoryPlan`` over a ``Workload`` — one
+profiling pass (abstract jaxpr, §profiler) feeds every candidate evaluation,
+exactly the paper's "build cost models from a single profiling pass and
+analytically evaluate all configurations".
+
+Runtime (Eq. 2-7): per-chunk max(compute, communication) pipelines for FWD and
+BWD, CPU(host)-update overlap, and host-link bandwidth contention between
+activation swapping and parameter uploads (§3.3's "compound effects").
+
+Memory (Eq. 8-11): block-granular replay of the FWD/BWD trajectory (the
+paper's operator-wise iteration, at the granularity our planner acts on),
+producing M_peak per device plus the trajectory for inspection (Fig. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.chunks import ChunkInfo, chunk_inventory
+from repro.core.hardware import HardwareSpec, MeshSpec
+from repro.core.plan import MemoryPlan
+from repro.core.profiler import BlockProfile, profile_superblock
+
+ADAM_FLOPS_PER_PARAM = 12.0  # fused Adam: ~12 flops/param (exp avgs + update)
+FP32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Everything the cost models need, profiled once per (cfg, shape, mesh)."""
+
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshSpec
+    hw: HardwareSpec
+    chunks: list[ChunkInfo]
+    block: BlockProfile  # one superblock, batch=1, full (unsharded) dims
+    positions: int = 1  # layers per superblock (remat granularity)
+    max_position_param_bytes: int = 0  # largest single layer's params (gather unit)
+
+    @property
+    def n_blocks(self) -> int:
+        return sum(1 for c in self.chunks if c.is_block)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    @property
+    def seqs_per_device(self) -> float:
+        return self.shape.global_batch / self.mesh.zero_degree
+
+    def seqs_per_ubatch(self, plan: MemoryPlan) -> float:
+        return self.seqs_per_device / plan.microbatch
+
+    # ---- per-chunk compute (per microbatch, per device) -------------------
+    def t_tp_allreduce(self, plan: MemoryPlan, n_ars: int = 2) -> float:
+        """Megatron-style TP activation all-reduces on the critical path:
+        ~2 per layer forward (attention out + MLP out), each moving the
+        (B_ubatch, S, D) activation over the model axis."""
+        t = self.mesh.tp_degree
+        if t <= 1:
+            return 0.0
+        act = self.block.boundary_bytes * self.seqs_per_ubatch(plan)
+        wire = 2.0 * (t - 1) / t * act
+        bw = self.hw.ici_bw * self.hw.coll_efficiency
+        return n_ars * self.positions * wire / bw
+
+    def t_comp_fwd(self, chunk: ChunkInfo, plan: MemoryPlan) -> float:
+        if not chunk.is_block:
+            return self._t_embed_head(chunk, plan)
+        scale = self.seqs_per_ubatch(plan) / self.mesh.tp_degree
+        t_flops = self.hw.matmul_time(self.block.flops_fwd * scale)
+        t_mem = self.hw.hbm_time(self.block.hbm_bytes_fwd * scale)
+        return max(t_flops, t_mem) + self.t_tp_allreduce(plan)
+
+    def t_comp_bwd(self, chunk: ChunkInfo, plan: MemoryPlan) -> float:
+        return 2.0 * self.t_comp_fwd(chunk, plan)
+
+    def _t_embed_head(self, chunk: ChunkInfo, plan: MemoryPlan) -> float:
+        # head matmul: 2*B*S*D*V (embed lookup is bandwidth-only)
+        cfg = self.cfg
+        tokens = self.seqs_per_ubatch(plan) * self.shape.seq_len
+        flops = 2.0 * tokens * cfg.d_model * cfg.vocab_size / self.mesh.tp_degree
+        if chunk.name == "embed":
+            return self.hw.hbm_time(chunk.param_bytes / self.mesh.tp_degree)
+        return max(self.hw.matmul_time(flops), self.hw.hbm_time(chunk.param_bytes))
+
+    # ---- per-chunk communication ------------------------------------------
+    def t_gather(self, chunk: ChunkInfo) -> float:
+        """All-gather of a ZeRO-sharded chunk's params (Eq. 4 gather term)."""
+        z = self.mesh.zero_degree
+        nbytes = chunk.param_bytes / self.mesh.tp_degree
+        return nbytes * (z - 1) / z / self.mesh.gather_bw(self.hw)
+
+    def t_upload(self, chunk: ChunkInfo, host_bw_eff: float) -> float:
+        """Host->device shard upload for host-resident chunks (Eq. 4 upload)."""
+        shard = chunk.param_bytes / (self.mesh.tp_degree * self.mesh.zero_degree)
+        return shard / host_bw_eff
+
+    def t_reduce(self, chunk: ChunkInfo, plan: MemoryPlan) -> float:
+        """Gradient reduce (Eq. 6): all-reduce for persistent (replicated)
+        chunks, reduce-scatter for sharded ones."""
+        z = self.mesh.zero_degree
+        nbytes = chunk.grad_bytes / self.mesh.tp_degree
+        bw = self.mesh.gather_bw(self.hw)
+        if plan.chunk_placement(chunk.index) == "persist" and not plan.zero1_persistent:
+            return 2.0 * nbytes * (z - 1) / z / bw
+        return nbytes * (z - 1) / z / bw
+
+    def t_grad_offload(self, chunk: ChunkInfo, host_bw_eff: float) -> float:
+        shard = chunk.grad_bytes / (self.mesh.tp_degree * self.mesh.zero_degree)
+        return shard / host_bw_eff
+
+    # ---- activation swap traffic -------------------------------------------
+    def boundary_dev_bytes(self, plan: MemoryPlan) -> float:
+        """Per-device bytes of one block-boundary activation (the scan carry).
+
+        With sequence-parallel activation sharding the boundary is split over
+        the TP axis as well as batch."""
+        scale = self.seqs_per_ubatch(plan)
+        b = self.block.boundary_bytes * scale
+        return b / self.mesh.tp_degree if plan.seq_shard_acts else b
+
+    def swap_bytes_per_block(self, plan: MemoryPlan) -> float:
+        """Bytes offloaded to host per swap block per microbatch, per device.
+
+        Swap offloads the block-*interior* residuals; the boundary (scan
+        carry) stays on device (see plan.py)."""
+        scale = self.seqs_per_ubatch(plan)
+        return self.block.act_residual_bytes * scale / self.mesh.tp_degree
+
+    def saved_bytes_per_block(self, plan: MemoryPlan, policy: str) -> float:
+        """Device-resident activation bytes a block leaves behind in FWD.
+
+        Remat is applied per *position* (layer) by default, so a checkpointed
+        superblock saves one boundary per position; grouped checkpointing
+        (ckpt_group=g) saves 1/g of them."""
+        boundary = self.positions * self.boundary_dev_bytes(plan)
+        if policy == "checkpoint":
+            return boundary / max(plan.ckpt_group, 1)
+        if policy == "swap":
+            return boundary
+        scale = self.seqs_per_ubatch(plan)
+        inner = self.block.act_residual_bytes * scale / self.mesh.tp_degree
+        return boundary + inner
+
+    def recompute_workspace(self, plan: MemoryPlan) -> float:
+        """Peak residuals live while one rematted region is re-run in BWD:
+        one position for per-layer remat, g superblocks for grouped remat."""
+        scale = self.seqs_per_ubatch(plan)
+        resid_sb = self.block.act_residual_bytes * scale / self.mesh.tp_degree
+        if plan.ckpt_group > 1:
+            return plan.ckpt_group * resid_sb + self.boundary_dev_bytes(plan)
+        return resid_sb / self.positions + self.boundary_dev_bytes(plan)
+
+
+def build_workload(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, hw: HardwareSpec
+) -> Workload:
+    import numpy as _np
+
+    from repro.models.layers import ParamDef as _PD
+    from repro.models.model import param_defs, superblock_period
+
+    # largest single position's parameter bytes (the point-of-use gather unit)
+    defs = param_defs(cfg)["blocks"]
+    r = max(
+        (d.shape[0] for d in jax.tree.leaves(
+            defs, is_leaf=lambda x: isinstance(x, _PD))), default=1
+    )
+    max_pos = 0
+    for pos, sub in defs.items():
+        nbytes = sum(
+            int(_np.prod(d.shape)) * (2 if d.dtype == "bfloat16" else 4)
+            for d in jax.tree.leaves(sub, is_leaf=lambda x: isinstance(x, _PD))
+        ) // r
+        max_pos = max(max_pos, nbytes)
+
+    return Workload(
+        cfg=cfg,
+        shape=shape,
+        mesh=mesh,
+        hw=hw,
+        chunks=chunk_inventory(cfg),
+        block=profile_superblock(cfg, 1, shape.seq_len),
+        positions=superblock_period(cfg),
+        max_position_param_bytes=max_pos,
+    )
+
+
+def step_totals(w: Workload, plan: MemoryPlan) -> tuple[float, float]:
+    """(flops, hbm_bytes) per chip per training step — the trip-count-aware
+    analytic oracle the roofline consumes (XLA CPU cost_analysis undercounts
+    loop bodies)."""
+    mesh = w.mesh
+    scale = w.seqs_per_ubatch(plan)
+    mb = plan.microbatch
+    blocks = [c for c in w.chunks if c.is_block]
+    f_fwd = w.block.flops_fwd * scale / mesh.tp_degree
+    b_fwd = w.block.hbm_bytes_fwd * scale / mesh.tp_degree
+    flops = bytes_ = 0.0
+    for c in blocks:
+        pol = plan.block_policy(c.block_index)
+        recompute = 1.0 if pol in ("checkpoint", "swap") and w.shape.is_training else 0.0
+        mult = (3.0 + recompute) if w.shape.is_training else 1.0
+        flops += f_fwd * mult * mb
+        bytes_ += b_fwd * mult * mb
+    # head matmul + embed traffic
+    tokens_dev = scale * w.shape.seq_len * mb
+    head_flops = 2.0 * tokens_dev * w.cfg.d_model * w.cfg.vocab_size / mesh.tp_degree
+    flops += head_flops * (3.0 if w.shape.is_training else 1.0)
+    emb = w.chunks[0].param_bytes / mesh.tp_degree
+    bytes_ += emb
+    if w.shape.is_training:
+        # optimizer traffic: read+write states (16 B/param resident view)
+        for c in w.chunks:
+            place = plan.chunk_placement(c.index)
+            opt = (c.optim_bytes + c.param_bytes + c.grad_bytes) / mesh.tp_degree
+            if place == "persist" and not plan.zero1_persistent:
+                bytes_ += 2 * opt
+            elif place != "host":
+                bytes_ += 2 * opt / mesh.zero_degree
+            flops += ADAM_FLOPS_PER_PARAM * c.param_count / mesh.n_chips
+    return flops, bytes_
+
+
+def serve_totals(w: Workload, plan: MemoryPlan) -> tuple[float, float]:
+    """(flops, hbm_bytes) per chip for one serve step (prefill or decode)."""
+    mesh = w.mesh
+    if w.shape.mode == "prefill":
+        return step_totals(w, plan)
+    # decode: one token, full weight + cache read
+    b_loc = w.shape.global_batch / mesh.zero_degree
+    n_active = w.cfg.active_param_count()
+    flops = 2.0 * n_active * b_loc / mesh.tp_degree
+    weights_dev = sum(c.param_bytes for c in w.chunks) / mesh.tp_degree
+    if plan.n_persist < plan.n_chunks:
+        weights_dev = weights_dev  # gathered through HBM once either way
+    from repro.core.serve_plan import cache_bytes_per_device
+
+    cache_dev = cache_bytes_per_device(w.cfg, w.shape, mesh)
+    return flops, weights_dev + cache_dev
+
+
+# ---------------------------------------------------------------------------
+# Runtime model (Eq. 2-7)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RuntimeBreakdown:
+    t_fwd: float
+    t_bwd: float
+    t_gpu_optim: float
+    t_cpu_optim: float
+    t_iteration: float
+    tokens_per_second: float
+    swap_feasible: bool
+
+    def row(self) -> dict:
+        return {k: round(v, 4) if isinstance(v, float) else v for k, v in vars(self).items()}
+
+
+def _host_bw_contention(w: Workload, plan: MemoryPlan) -> tuple[float, bool]:
+    """Effective host-link bandwidth left for parameter traffic when
+    activation swapping shares the link (paper §3.3's contention modeling).
+
+    Returns (effective host bw, swap feasible within compute window)."""
+    hw = w.hw
+    if plan.n_swap == 0:
+        return hw.host_bw, True
+    blocks = [c for c in w.chunks if c.is_block]
+    t_fwd_compute = sum(w.t_comp_fwd(c, plan) for c in blocks)
+    swap_total = plan.n_swap * w.swap_bytes_per_block(plan)
+    swap_time = swap_total / hw.host_bw
+    # swap must drain within the forward compute window (else it backs up
+    # into the backward pass and stalls it — infeasible by construction)
+    feasible = swap_time <= t_fwd_compute
+    util = min(swap_time / max(t_fwd_compute, 1e-9), 1.0)
+    return hw.host_bw * max(1.0 - util, 0.05), feasible
+
+
+def estimate_runtime(w: Workload, plan: MemoryPlan) -> RuntimeBreakdown:
+    host_bw_eff, feasible = _host_bw_contention(w, plan)
+    n = w.n_chunks
+    chunks = w.chunks
+
+    # --- forward (Eq. 3): pipeline of compute vs next-chunk prefetch -------
+    t_fwd = 0.0
+    for i in range(n + 1):
+        t_comp = w.t_comp_fwd(chunks[i - 1], plan) if i >= 1 else 0.0
+        t_pref = 0.0
+        if i < n:
+            c = chunks[i]
+            place = plan.chunk_placement(c.index)
+            if place != "persist":
+                t_pref = w.t_gather(c)
+                if place == "host" and plan.host_params:
+                    t_pref += w.t_upload(c, host_bw_eff)
+        t_fwd += max(t_comp, t_pref)
+
+    # --- backward (Eq. 5): compute+recompute vs re-gather vs reduce --------
+    # BWD visits chunks in reverse execution order.
+    order = list(range(n - 1, -1, -1))
+    t_bwd = 0.0
+    for idx, i in enumerate(order):
+        c = chunks[i]
+        t_comp = w.t_comp_bwd(c, plan)
+        if c.is_block and plan.block_policy(c.block_index) == "checkpoint":
+            t_comp += w.t_comp_fwd(c, plan)  # T_recomp
+        if c.is_block and plan.block_policy(c.block_index) == "swap":
+            # activation fetch from host for this block (overlappable but
+            # competes on the host link)
+            t_fetch = w.swap_bytes_per_block(plan) / host_bw_eff
+        else:
+            t_fetch = 0.0
+        # re-gather of the *next* chunk to be visited (Eq. 7): only when its
+        # gathered weights were not buffered
+        t_pref = 0.0
+        if idx + 1 < n:
+            nxt = chunks[order[idx + 1]]
+            if plan.chunk_placement(nxt.index) != "persist" and not plan.chunk_buffered(nxt.index):
+                t_pref = w.t_gather(nxt)
+                if plan.chunk_placement(nxt.index) == "host" and plan.host_params:
+                    t_pref += w.t_upload(nxt, host_bw_eff)
+        # reduce+offload of the previous chunk's grads (Eq. 6)
+        t_red = 0.0
+        if idx >= 1:
+            prv = chunks[order[idx - 1]]
+            t_red = w.t_reduce(prv, plan)
+            if plan.chunk_placement(prv.index) == "host" and plan.host_params:
+                t_red += w.t_grad_offload(prv, host_bw_eff)
+        t_bwd += max(t_comp, t_pref, t_red, t_fetch)
+    # tail: last visited chunk's reduce
+    t_bwd += w.t_reduce(chunks[order[-1]], plan)
+
+    # --- optimizer (Eq. 2) ---------------------------------------------------
+    hw, mesh = w.hw, w.mesh
+    t_gpu = t_cpu = 0.0
+    for c in chunks:
+        place = plan.chunk_placement(c.index)
+        opt_traffic = (c.optim_bytes + c.param_bytes + c.grad_bytes) / mesh.tp_degree
+        if place == "persist" and not plan.zero1_persistent:
+            t_gpu += hw.hbm_time(2 * opt_traffic)  # read+write, replicated
+        elif place == "host" and plan.host_optimizer:
+            shard_params = c.param_count / (mesh.tp_degree * mesh.zero_degree)
+            t_flops = ADAM_FLOPS_PER_PARAM * shard_params / hw.host_flops
+            t_dma = 26.0 * shard_params / hw.host_bw  # m+v+master down + back (+p)
+            t_cpu += max(t_flops, t_dma)
+        else:
+            t_gpu += hw.hbm_time(2 * opt_traffic / mesh.zero_degree)
+
+    mb = plan.microbatch
+    t_iter = mb * t_fwd + max(mb * t_bwd + t_gpu, t_cpu)
+    tokens = w.shape.global_batch * w.shape.seq_len
+    return RuntimeBreakdown(
+        t_fwd=mb * t_fwd,
+        t_bwd=mb * t_bwd,
+        t_gpu_optim=t_gpu,
+        t_cpu_optim=t_cpu,
+        t_iteration=t_iter,
+        tokens_per_second=tokens / t_iter,
+        swap_feasible=feasible,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Memory model (Eq. 8-11): block-granular trajectory replay
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class MemoryBreakdown:
+    model_states: float
+    gathered_buffers: float
+    activations: float
+    workspace: float
+    logits: float
+    peak: float
+    trajectory: list[float]  # M_cur over fwd blocks then bwd blocks (Fig. 2)
+
+    def row(self) -> dict:
+        d = {k: round(v / 1e9, 3) for k, v in vars(self).items() if isinstance(v, float)}
+        return d
+
+
+def estimate_memory(w: Workload, plan: MemoryPlan, ce_chunk: int = 2048) -> MemoryBreakdown:
+    mesh, cfg = w.mesh, w.cfg
+    tp, z = mesh.tp_degree, mesh.zero_degree
+
+    # --- resident model states (Eq. 11's M_persist / M_buffer terms) -------
+    states = 0.0
+    gathered = 0.0
+    for c in w.chunks:
+        place = plan.chunk_placement(c.index)
+        full = (c.param_bytes + c.grad_bytes + c.optim_bytes) / tp
+        if place == "persist":
+            if plan.zero1_persistent:
+                states += (c.param_bytes + c.grad_bytes) / tp + c.optim_bytes / (tp * z)
+            else:
+                states += full
+        elif place == "hbm":
+            states += full / z
+        elif place == "host" and not plan.host_params:
+            states += (c.param_bytes + c.grad_bytes) / (tp * z)  # ZeRO-Offload split
+        if plan.chunk_buffered(c.index) and place != "persist":
+            gathered += c.param_bytes / tp
+    # host chunks: grads live on device only in a 2-chunk reduce->offload window
+    host_blocks = [c for c in w.chunks if plan.chunk_placement(c.index) == "host"]
+    if host_blocks:
+        states += 2 * max(c.grad_bytes for c in host_blocks) / (tp * z)
+    # two in-flight gather buffers (prefetch + execute), the paper's n_buffer>=2
+    # floor. The gather unit is one *position* (layer): hybrids/MoE gather a
+    # 44B-param superblock layer-by-layer, not all at once.
+    blocks = [c for c in w.chunks if c.is_block]
+    if blocks and any(plan.chunk_placement(c.index) != "persist" for c in w.chunks):
+        unit = w.max_position_param_bytes or max(c.param_bytes for c in blocks)
+        gathered += 2 * unit / tp
+
+    # --- activations (Eq. 8) -------------------------------------------------
+    acts = 0.0
+    traj = []
+    for b in range(w.n_blocks):
+        acts += w.saved_bytes_per_block(plan, plan.block_policy(b))
+        traj.append(states + gathered + acts)
+
+    # --- backward trajectory (Eq. 9-10 at block granularity) ---------------
+    peak_bwd = 0.0
+    cur = acts
+    scale = w.seqs_per_ubatch(plan)
+    recompute_ws = w.recompute_workspace(plan)
+    grad_ws = w.boundary_dev_bytes(plan)  # dL/dx flowing between blocks
+    transient = w.block.peak_transient_bytes * scale / tp / w.positions
+    for b in range(w.n_blocks - 1, -1, -1):
+        pol = plan.block_policy(b)
+        extra = recompute_ws if pol in ("checkpoint", "swap") else 0.0  # I_checkpoint term
+        cur_peak = states + gathered + cur + extra + grad_ws + transient
+        peak_bwd = max(peak_bwd, cur_peak)
+        traj.append(cur_peak)
+        cur -= w.saved_bytes_per_block(plan, pol)
+        cur = max(cur, 0.0)
+
+    # --- logits / loss workspace (chunked cross-entropy) --------------------
+    toks = min(ce_chunk, w.shape.seq_len) * max(scale, 1.0)
+    logits = toks * cfg.vocab_size / tp * (2 + FP32)  # bf16 logits + fp32 softmax
+    if not w.shape.is_training:
+        logits = max(scale, 1.0) * cfg.vocab_size / tp * (2 + FP32)
+
+    workspace = w.block.peak_transient_bytes * scale / tp / w.positions
+    peak = max(max(traj) if traj else 0.0, states + gathered + workspace) + logits
+    return MemoryBreakdown(
+        model_states=states,
+        gathered_buffers=gathered,
+        activations=acts,
+        workspace=workspace,
+        logits=logits,
+        peak=peak,
+        trajectory=traj,
+    )

@@ -1,0 +1,122 @@
+"""MemoryPlan: the compact configuration space ProTrain searches (§3.3).
+
+The paper's tunables {n_persist, n_buffer, n_swap, n_checkpoint} plus the
+TPU-hierarchy extension ``n_host`` (non-persistent chunks whose shards live in
+host memory rather than HBM — the analogue of the paper's CPU offload of
+parameters/optimizer states, generalized because a v5e chip has only 16 GB)
+and ``microbatch`` (gradient accumulation splits, which the memory model needs
+to reason about activation footprints at large global batches).
+
+Chunk i (execution order) is treated as:
+  i <  n_persist                  -> persistent: replicated over ZeRO axes
+  n_persist <= i < N - n_host     -> ZeRO-sharded, shards resident in HBM
+  i >= N - n_host                 -> ZeRO-sharded, shards resident in host mem
+Block b (one per chunk; chunk == superblock == transformer block group):
+  b <  n_swap                     -> "swap": block-interior activations are
+                                     offloaded to host (jax.checkpoint offload
+                                     policy); the block boundary (the scan
+                                     carry) stays on device — a documented TPU
+                                     adaptation: XLA scan AD owns the carries
+  n_swap <= b < n_swap + n_ckpt   -> gradient checkpointing (remat)
+  otherwise                       -> unoptimized (keep activations)
+Buffers: the last ``n_buffer`` non-persistent chunks keep their *gathered*
+weights live from forward to backward (no re-gather in BWD) — the analogue of
+chunk-buffer reuse; the backward pass visits those chunks first, which is
+exactly the paper's motivation for placing persistent chunks at the front.
+
+Swap blocks are placed earliest (paper Fig. 2: more time to overlap), then
+checkpoint blocks, then unoptimized blocks last so their activations are
+consumed first in BWD.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPlan:
+    n_chunks: int  # N_chunk (model-state chunks == superblocks + embed/head)
+    n_blocks: int  # N_block (activation blocks == superblocks)
+    n_persist: int = 0
+    n_buffer: int = 0
+    n_swap: int = 0
+    n_checkpoint: int = 0
+    n_host: int = 0  # non-persistent chunks offloaded to host memory
+    microbatch: int = 1  # gradient-accumulation splits of the global batch
+    host_optimizer: bool = True  # host chunks update off-device (CPU-Adam analogue)
+    zero1_persistent: bool = False  # beyond-paper: shard opt state of persistent chunks
+    # beyond-paper: shard block-boundary activations over the TP axis
+    # (Megatron-style sequence parallelism); the paper-faithful baseline keeps
+    # boundaries replicated across TP like its GPU implementation does.
+    seq_shard_acts: bool = False
+    # beyond-paper: repurpose the model axis as an extra data axis (weights
+    # replicated across it, batch sharded over it). Kills the Megatron TP
+    # activation all-reduces that dominate small models on a fixed
+    # (data, model) production mesh. Requires global_batch % n_chips == 0.
+    dp_only: bool = False
+    # beyond-paper: checkpoint granularity — remat regions of `ckpt_group`
+    # consecutive layers instead of one. Saves 1/g of the boundary
+    # activations at the cost of g-layer recompute working sets (the
+    # classic sqrt(n) rematerialization trade, Chen et al. 2016).
+    ckpt_group: int = 1
+    # host-chunk layout: True = paper-faithful full offload (params + states on
+    # host; gathers ride the host link every microbatch). False = ZeRO-Offload
+    # split: bf16 param/grad shards stay in HBM (gathers ride ICI), only the
+    # fp32 optimizer states live on host and round-trip once per step.
+    host_params: bool = True
+
+    def __post_init__(self):
+        assert 0 <= self.n_persist <= self.n_chunks
+        assert 0 <= self.n_buffer <= self.n_chunks - self.n_persist
+        assert 0 <= self.n_host <= self.n_chunks - self.n_persist
+        assert 0 <= self.n_swap + self.n_checkpoint <= self.n_blocks
+        assert self.microbatch >= 1
+
+    # ---- block policy ----------------------------------------------------
+    def block_policy(self, b: int) -> str:
+        if b < self.n_swap:
+            return "swap"
+        if b < self.n_swap + self.n_checkpoint:
+            return "checkpoint"
+        return "none"
+
+    def block_policies(self) -> list[str]:
+        return [self.block_policy(b) for b in range(self.n_blocks)]
+
+    # ---- chunk placement ---------------------------------------------------
+    def chunk_placement(self, i: int) -> str:
+        """persist | hbm | host, for chunk i in execution order."""
+        if i < self.n_persist:
+            return "persist"
+        if i >= self.n_chunks - self.n_host:
+            return "host"
+        return "hbm"
+
+    def chunk_buffered(self, i: int) -> bool:
+        """Gathered weights of chunk i kept live FWD->BWD?"""
+        if self.chunk_placement(i) == "persist":
+            return True  # persistent chunks are always resident
+        return i >= self.n_chunks - self.n_buffer
+
+    def describe(self) -> str:
+        return (
+            f"persist={self.n_persist}/{self.n_chunks} buffer={self.n_buffer} "
+            f"host={self.n_host} swap={self.n_swap} ckpt={self.n_checkpoint} "
+            f"ubatch={self.microbatch}"
+        )
+
+
+def fully_resident_plan(n_chunks: int, n_blocks: int) -> MemoryPlan:
+    """Everything persistent, no remat/swap — the small-model fast path."""
+    return MemoryPlan(n_chunks=n_chunks, n_blocks=n_blocks, n_persist=n_chunks, n_host=0)
+
+
+def fsdp_style_plan(n_chunks: int, n_blocks: int, checkpoint_all: bool = True) -> MemoryPlan:
+    """Paper baseline: FSDP = everything sharded, checkpoint all-or-nothing."""
+    return MemoryPlan(
+        n_chunks=n_chunks,
+        n_blocks=n_blocks,
+        n_persist=0,
+        n_buffer=0,
+        n_checkpoint=n_blocks if checkpoint_all else 0,
+    )

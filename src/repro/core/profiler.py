@@ -1,0 +1,262 @@
+"""Memory-aware profiler (§3.2), adapted to JAX.
+
+The paper instruments PyTorch with allocator hooks because layer-wise hooks
+miss (a) transient intra-operator allocations and (b) "unhookable" functional
+ops. Under JAX we can do structurally better: tracing a step to a jaxpr gives
+us *every* primitive — nothing is unhookable — and abstract interpretation of
+the jaxpr (liveness replay) reconstructs the allocate-before-free memory
+trajectory without running the model, which is the exact analogue of the
+paper's on-demand profiling pass ("reduces peak memory to that of the largest
+single operator"): here the cost is zero bytes, not one operator.
+
+Outputs per op: FLOPs, HBM traffic, output ("current delta") bytes, transient
+bytes, plus the running live-set M_cur — the Δ terms of Eq. 9-10. Per block:
+activation residuals that AD would save (split into weight-derived vs
+activation-derived, which is what the n_buffer semantics needs).
+
+The same walker doubles as the trip-count-aware FLOPs/bytes oracle for the
+roofline analysis (XLA's cost_analysis does not multiply while-loop bodies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+# primitives whose transpose rule needs their *inputs* saved as residuals
+_NONLINEAR = {
+    "exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt", "sin", "cos",
+    "integer_pow", "pow", "max", "min", "div", "rem", "cumsum",
+    "custom_jvp_call",  # jax.nn.gelu/silu etc. lower through this
+}
+_MATMUL = {"dot_general"}
+# ops that need extra workspace beyond their output (paper's intra-op spike)
+_TRANSIENT = {"sort", "top_k", "gather", "scatter", "scatter-add", "concatenate"}
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    batch = int(np.prod([a.shape[i] for i in lb])) if lb else 1
+    contract = int(np.prod([a.shape[i] for i in lc])) if lc else 1
+    m = int(np.prod([s for i, s in enumerate(a.shape) if i not in set(lc) | set(lb)]))
+    n = int(np.prod([s for i, s in enumerate(b.shape) if i not in set(rc) | set(rb)]))
+    return 2.0 * batch * m * n * contract
+
+
+@dataclasses.dataclass
+class OpRecord:
+    name: str
+    flops: float
+    bytes_in: int
+    bytes_out: int
+    transient_bytes: int
+    live_bytes: int  # M_cur after this op (liveness replay)
+
+
+@dataclasses.dataclass
+class TraceProfile:
+    ops: list[OpRecord]
+    peak_live_bytes: int  # on-demand liveness peak (no residual persistence)
+    total_flops: float
+    total_bytes: int  # HBM traffic proxy: sum of in+out per op
+    residual_act_bytes: int  # AD residuals from activations
+    residual_weight_bytes: int  # AD residuals that are raw weights
+    largest_op_bytes: int
+
+    def summary(self) -> dict:
+        return {
+            "ops": len(self.ops),
+            "gflops": self.total_flops / 1e9,
+            "traffic_gb": self.total_bytes / 1e9,
+            "peak_live_mb": self.peak_live_bytes / 1e6,
+            "resid_act_mb": self.residual_act_bytes / 1e6,
+        }
+
+
+def _walk(jaxpr, *, weight_vars: set, mult: float, ops: list, resid: dict, depth=0):
+    """Recursive jaxpr walk. Returns (flops, traffic, peak_live, largest_op)."""
+    # liveness: last use index per var
+    last_use: dict[Any, int] = {}
+    for i, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.invars:
+            if isinstance(v, jcore.Var):
+                last_use[v] = i
+    for v in jaxpr.outvars:
+        if isinstance(v, jcore.Var):
+            last_use[v] = len(jaxpr.eqns)
+
+    live = {v: _aval_bytes(v.aval) for v in jaxpr.invars if isinstance(v, jcore.Var)}
+    cur = sum(live.values())
+    peak = cur
+    flops = traffic = 0.0
+    largest = 0
+
+    for i, eqn in enumerate(jaxpr.eqns):
+        prim = eqn.primitive.name
+        in_b = sum(_aval_bytes(v.aval) for v in eqn.invars if hasattr(v, "aval"))
+        out_b = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+
+        inner = None
+        inner_mult = 1.0
+        if prim == "scan":
+            inner = eqn.params["jaxpr"].jaxpr
+            inner_mult = eqn.params["length"]
+        elif prim == "while":
+            inner = eqn.params["body_jaxpr"].jaxpr
+            inner_mult = eqn.params.get("trip_count") or 1.0
+        elif prim in ("pjit", "closed_call", "custom_vjp_call_jaxpr", "remat"):
+            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")).jaxpr
+        elif prim == "custom_jvp_call" and "call_jaxpr" in eqn.params:
+            inner = eqn.params["call_jaxpr"].jaxpr
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            inner = branches[0].jaxpr  # cost of one branch
+
+        if inner is not None:
+            f, t, p, lo = _walk(
+                inner, weight_vars=set(), mult=mult * inner_mult, ops=ops,
+                resid=resid, depth=depth + 1,
+            )
+            flops += f * inner_mult
+            traffic += t * inner_mult
+            peak = max(peak, cur + p)
+            largest = max(largest, lo)
+        else:
+            f = _dot_flops(eqn) if prim in _MATMUL else float(out_b // max(
+                eqn.outvars[0].aval.dtype.itemsize if eqn.outvars else 1, 1))
+            if prim in ("broadcast_in_dim", "reshape", "transpose", "convert_element_type",
+                        "squeeze", "slice", "iota", "copy"):
+                f = 0.0
+            flops += f
+            traffic += in_b + out_b
+            transient = out_b if prim in _TRANSIENT else 0
+            # residual classification for AD
+            if depth == 0 or True:
+                if prim in _MATMUL:
+                    for v in eqn.invars:
+                        if isinstance(v, jcore.Var) and v not in resid:
+                            kind = "w" if v in weight_vars else "a"
+                            resid[v] = (kind, _aval_bytes(v.aval))
+                elif prim in _NONLINEAR:
+                    for v in eqn.invars:
+                        if isinstance(v, jcore.Var) and v not in resid:
+                            resid[v] = ("a", _aval_bytes(v.aval))
+            cur += out_b
+            peak = max(peak, cur + transient)
+            largest = max(largest, in_b + out_b + transient)
+            ops.append(OpRecord(prim, f * mult, in_b, out_b, transient, cur))
+
+        # free vars whose last use has passed
+        for v in list(live):
+            if last_use.get(v, -1) <= i:
+                cur -= live.pop(v)
+        for v in eqn.outvars:
+            if isinstance(v, jcore.Var) and last_use.get(v, -1) > i:
+                live[v] = _aval_bytes(v.aval)
+        # (outputs were already added to cur; reconcile)
+        cur = sum(live.values())
+        peak = max(peak, cur)
+
+    return flops, traffic, peak, largest
+
+
+def profile_fn(fn: Callable, *args, weight_args: tuple[int, ...] = ()) -> TraceProfile:
+    """Trace ``fn(*args)`` abstractly and profile its jaxpr.
+
+    ``weight_args``: indices of positional args that are model weights
+    (their residuals are classified as weight-derived).
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    jaxpr = closed.jaxpr
+    weight_vars: set = set()
+    flat_idx = 0
+    flat_args, _ = jax.tree.flatten(args)
+    # invars correspond to flattened args
+    arg_positions: list[int] = []
+    for pos, a in enumerate(args):
+        n = len(jax.tree.leaves(a))
+        arg_positions.extend([pos] * n)
+    for v, pos in zip(jaxpr.invars, arg_positions):
+        if pos in weight_args:
+            weight_vars.add(v)
+
+    ops: list[OpRecord] = []
+    resid: dict = {}
+    flops, traffic, peak, largest = _walk(
+        jaxpr, weight_vars=weight_vars, mult=1.0, ops=ops, resid=resid
+    )
+    r_act = sum(b for k, b in resid.values() if k == "a")
+    r_w = sum(b for k, b in resid.values() if k == "w")
+    return TraceProfile(
+        ops=ops,
+        peak_live_bytes=int(peak),
+        total_flops=float(flops),
+        total_bytes=int(traffic),
+        residual_act_bytes=int(r_act),
+        residual_weight_bytes=int(r_w),
+        largest_op_bytes=int(largest),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block-level profile: what the cost/memory models consume
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockProfile:
+    """Per-superblock forward statistics for one microbatch."""
+
+    flops_fwd: float
+    hbm_bytes_fwd: float
+    act_residual_bytes: int  # saved residuals under 'none' policy
+    boundary_bytes: int  # block input (B,S,D) — the 'checkpoint'/'swap' residual
+    peak_transient_bytes: int  # workspace while computing the block
+
+    @property
+    def flops_bwd(self) -> float:
+        return 2.0 * self.flops_fwd  # standard dL/dx + dL/dw cost
+
+    @property
+    def flops_recompute(self) -> float:
+        return self.flops_fwd
+
+
+def profile_superblock(cfg, batch: int, seq: int) -> BlockProfile:
+    """Profile one superblock forward at (batch, seq) per microbatch=1."""
+    import jax.numpy as jnp
+
+    from repro.models import model as M
+    from repro.models.layers import init_tree  # noqa: F401 (abstract only)
+
+    defs = M.param_defs(cfg)["blocks"]
+    one = jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape[1:], jnp.dtype(d.dtype)),
+        defs,
+        is_leaf=lambda x: hasattr(x, "shape") and not hasattr(x, "aval"),
+    )
+    x = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.dtype(cfg.dtype))
+
+    def fwd(params, x):
+        out, aux = M.apply_superblock(params, x, cfg)
+        return out
+
+    prof = profile_fn(fwd, one, x, weight_args=(0,))
+    boundary = int(np.prod([batch, seq, cfg.d_model])) * jnp.dtype(cfg.dtype).itemsize
+    return BlockProfile(
+        flops_fwd=prof.total_flops,
+        hbm_bytes_fwd=prof.total_bytes,
+        act_residual_bytes=prof.residual_act_bytes,
+        boundary_bytes=boundary,
+        peak_transient_bytes=prof.peak_live_bytes,
+    )

@@ -1,0 +1,57 @@
+"""Serving (prefill/decode) memory planning.
+
+Serving has no gradients or optimizer states, so chunk management degenerates
+to persist-vs-gather for weights (paper's scope is training; we still plan the
+decode cells). Heuristic: keep the whole weight stack persistent when it fits
+comfortably next to the KV cache; otherwise ZeRO-shard the blocks and gather
+per layer.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.chunks import chunk_inventory
+from repro.core.hardware import HardwareSpec, MeshSpec
+from repro.core.plan import MemoryPlan
+from repro.models import kvcache as KV
+from repro.models.model import num_repeats
+
+
+def cache_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec) -> float:
+    specs = KV.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    total = sum(
+        int(np.prod(s.shape)) * s.dtype.itemsize
+        for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    )
+    # batch over ZeRO axes; seq (attention) / heads (mamba) over TP
+    return total / (mesh.zero_degree * mesh.tp_degree)
+
+
+def serve_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, hw: HardwareSpec) -> MemoryPlan:
+    chunks = chunk_inventory(cfg)
+    nc, nb = len(chunks), num_repeats(cfg)
+    weights_dev = sum(c.param_bytes for c in chunks) / mesh.tp_degree
+    cache_dev = cache_bytes_per_device(cfg, shape, mesh)
+    budget = hw.hbm_bytes * 0.9
+    if weights_dev + cache_dev < 0.7 * budget:
+        return MemoryPlan(n_chunks=nc, n_blocks=nb, n_persist=nc)
+    # ZeRO-shard everything; decode gathers layer by layer
+    return MemoryPlan(n_chunks=nc, n_blocks=nb, n_persist=0)
+
+
+def serve_memory_estimate(cfg, shape, mesh: MeshSpec, plan: MemoryPlan) -> dict:
+    chunks = chunk_inventory(cfg)
+    weights = sum(c.param_bytes for c in chunks)
+    if plan.n_persist == plan.n_chunks:
+        w_dev = weights / mesh.tp_degree
+    else:
+        blk = max((c.param_bytes for c in chunks if c.is_block), default=0)
+        w_dev = weights / (mesh.tp_degree * mesh.zero_degree) + 2 * blk / mesh.tp_degree
+    cache = cache_bytes_per_device(cfg, shape, mesh)
+    return {
+        "weights_gb": w_dev / 1e9,
+        "cache_gb": cache / 1e9,
+        "peak_gb": (w_dev + cache) / 1e9,
+    }

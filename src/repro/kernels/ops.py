@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container) they
+run in interpret mode, which executes the kernel body op-by-op — bit-for-bit
+the same math, so tests validate the kernel logic against the ref.py oracles
+without TPU hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_adam as _fa
+from repro.kernels import flash_attention as _flash
+from repro.kernels import rmsnorm as _rn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=not _on_tpu(),
+    )
+
+
+def fused_adam_update(p, g, master, m, v, *, lr, b1, b2, eps, weight_decay, bc1, bc2):
+    """Signature-compatible with optim.adam._update_leaf's fused branch."""
+    scal = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(b1, jnp.float32),
+        jnp.asarray(b2, jnp.float32), jnp.asarray(eps, jnp.float32),
+        jnp.asarray(weight_decay, jnp.float32), jnp.asarray(bc1, jnp.float32),
+        jnp.asarray(bc2, jnp.float32), jnp.zeros((), jnp.float32),
+    ])
+    return _fa.fused_adam(p, g, master, m, v, scal, interpret=not _on_tpu())
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=not _on_tpu())

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Hq, Sq, hd)
+    k: jax.Array,  # (B, Hkv, Sk, hd)
+    v: jax.Array,  # (B, Hkv, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    b, hq, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qh = q.reshape(b, hkv, g, sq, hd).astype(jnp.float32) / np.sqrt(hd)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qh, k.astype(jnp.float32))
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+def fused_adam_ref(p, g, master, m, v, *, lr, b1, b2, eps, weight_decay, bc1, bc2):
+    gf = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * gf
+    v_new = b2 * v + (1 - b2) * gf * gf
+    upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    if weight_decay:
+        upd = upd + weight_decay * master
+    master_new = master - lr * upd
+    return master_new.astype(p.dtype), master_new, m_new, v_new
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype) * scale

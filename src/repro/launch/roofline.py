@@ -1,0 +1,220 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = FLOPs_per_chip / (peak_FLOP/s)
+    memory     = HBM_bytes_per_chip / HBM_bw
+    collective = serialized collective bytes per chip / link_bw
+
+FLOPs/bytes: ``compiled.cost_analysis()`` on the CPU backend does NOT multiply
+while-loop body costs by trip count (verified empirically), so the analytic
+oracle comes from the jaxpr profiler (trip-count aware) and cost_analysis is
+reported as the raw reference. Collective bytes are parsed from the compiled
+HLO with a call-graph walk that multiplies ops inside while bodies by their
+trip counts (recovered from the loop-condition constants).
+
+CPU-backend dtype caveat: XLA CPU upcasts every bf16 dot to fp32, which drags
+weight all-gathers and some residuals to fp32 — 2x the bytes a TPU build
+moves. We report both ``raw`` (exactly what this HLO says) and ``corrected``
+(fp32 collective bytes halved — the bf16-native TPU number). See DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s32": 4,
+               "u32": 4, "f32": 4, "f64": 8, "s64": 8, "u64": 8}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16384,53248]' -> bytes. Tuples: sum of elements."""
+    total = 0
+    for m in re.finditer(r"(pred|s8|u8|bf16|f16|s32|u32|f32|f64|s64|u64)\[([0-9,]*)\]", shape_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    nbytes: int  # payload (output for ag, input for rs, buffer for ar)
+    dtype: str
+    group_size: int
+    computation: str
+    multiplier: float = 1.0
+
+    def wire_bytes(self) -> float:
+        """Per-chip serialized bytes on the slowest link (ring algorithms)."""
+        g = max(self.group_size, 1)
+        if self.kind == "all-gather":
+            return self.nbytes * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return self.nbytes * (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2.0 * self.nbytes * (g - 1) / g
+        if self.kind == "all-to-all":
+            return self.nbytes * (g - 1) / g
+        return float(self.nbytes)  # collective-permute
+
+
+def _split_computations(hlo: str) -> dict[str, str]:
+    comps: dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        # header: `%name (params...) -> type {` — params may nest parens
+        # (tuple-typed while bodies), so match greedily to the arrow
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->", line)
+        if m and line.rstrip().endswith("{"):
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = m.group(2)
+            cur_lines = [line]
+        elif cur_name is not None:
+            cur_lines.append(line)
+            if line.strip() == "}":
+                comps[cur_name] = "\n".join(cur_lines)
+                cur_name = None
+                cur_lines = []
+    if cur_name is not None:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+def _trip_count(cond_text: str) -> float:
+    """Recover the trip count from a while condition (counter < constant)."""
+    consts = [int(c) for c in re.findall(r"s32\[\]\s+constant\((\d+)\)", cond_text)]
+    candidates = [c for c in consts if c > 1]
+    return float(max(candidates)) if candidates else 1.0
+
+
+def parse_collectives(hlo: str) -> list[CollectiveOp]:
+    comps = _split_computations(hlo)
+    entry = None
+    for name, text in comps.items():
+        if "ENTRY" in text.splitlines()[0]:
+            entry = name
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k]))
+
+    # call edges: while(body=, condition=), call/fusion(calls=), conditional
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        cur = order.pop(0)
+        text = comps.get(cur, "")
+        m_cur = mult.get(cur, 1.0)
+        for m in re.finditer(r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", text):
+            cond, body = m.groups()
+            tc = _trip_count(comps.get(cond, ""))
+            mult[body] = mult.get(body, 0.0) + m_cur * tc
+            if body not in seen:
+                seen.add(body)
+                order.append(body)
+        for m in re.finditer(r"(?:calls|to_apply|branches)=\{?%?([\w.\-{},\s]+?)\}?[,\)]", text):
+            for callee in re.findall(r"[\w.\-]+", m.group(1)):
+                if callee in comps and callee != cur:
+                    mult[callee] = mult.get(callee, 0.0) + m_cur
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+
+    ops: list[CollectiveOp] = []
+    for name, text in comps.items():
+        m_comp = mult.get(name)
+        if m_comp is None:
+            continue
+        for line in text.splitlines():
+            mm = re.match(r"\s*%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(", line)
+            if not mm:
+                continue
+            if re.search(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)-done", line):
+                continue
+            shape_str, kind = mm.groups()
+            nbytes = _shape_bytes(shape_str)
+            if kind == "all-gather":
+                pass  # output shape == full gathered payload
+            dts = re.findall(r"(pred|bf16|f16|f32|s32|u32|f64)\[", shape_str)
+            dtype = dts[0] if dts else "f32"
+            gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            if gm:
+                group_size = int(gm.group(2))
+            else:
+                gm2 = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+                group_size = len(gm2.group(1).split(",")) if gm2 else 1
+            ops.append(CollectiveOp(kind, nbytes, dtype, group_size, name, m_comp))
+    return ops
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops_per_chip: float  # analytic, trip-count aware
+    hbm_bytes_per_chip: float
+    collective_bytes_raw: float  # per chip, serialized, as compiled (CPU fp32)
+    collective_bytes_corrected: float  # fp32->bf16 corrected
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float  # 6*N*D (dense) / 6*N_active*D (MoE)
+    useful_flops_ratio: float
+    by_kind: dict[str, float]
+    xla_flops_raw: float = 0.0
+    xla_bytes_raw: float = 0.0
+
+    def row(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["by_kind"] = {k: round(v / 1e9, 3) for k, v in self.by_kind.items()}
+        return d
+
+
+def analyze(
+    *,
+    hlo: str,
+    flops_per_chip: float,
+    hbm_bytes_per_chip: float,
+    model_flops_per_chip: float,
+    hw,
+    xla_flops: float = 0.0,
+    xla_bytes: float = 0.0,
+    dtype_correction: bool = True,
+) -> RooflineReport:
+    ops = parse_collectives(hlo)
+    raw = sum(o.wire_bytes() * o.multiplier for o in ops)
+    corrected = sum(
+        o.wire_bytes() * o.multiplier * (0.5 if (dtype_correction and o.dtype == "f32") else 1.0)
+        for o in ops
+    )
+    by_kind: dict[str, float] = {}
+    for o in ops:
+        by_kind[o.kind] = by_kind.get(o.kind, 0.0) + o.wire_bytes() * o.multiplier
+
+    t_comp = flops_per_chip / hw.peak_flops
+    t_mem = hbm_bytes_per_chip / hw.hbm_bw
+    t_coll = corrected / hw.ici_bw
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    return RooflineReport(
+        flops_per_chip=flops_per_chip,
+        hbm_bytes_per_chip=hbm_bytes_per_chip,
+        collective_bytes_raw=raw,
+        collective_bytes_corrected=corrected,
+        t_compute=t_comp,
+        t_memory=t_mem,
+        t_collective=t_coll,
+        bottleneck=max(terms, key=terms.get),
+        model_flops=model_flops_per_chip,
+        useful_flops_ratio=model_flops_per_chip / flops_per_chip if flops_per_chip else 0.0,
+        by_kind=by_kind,
+        xla_flops_raw=xla_flops,
+        xla_bytes_raw=xla_bytes,
+    )

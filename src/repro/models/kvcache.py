@@ -1,0 +1,179 @@
+"""Decode-time caches and the single-token decode forward.
+
+Cache layout mirrors the superblock structure: per superblock position there
+is a stack over repeats — attention positions carry (k, v) of shape
+(R, B, S_max, n_kv, hd); mamba positions carry (conv_state, ssm_state). The
+decode step scans over repeats, consuming and re-emitting cache slices, so the
+HLO stays depth-independent just like training.
+
+Sub-quadratic handling for ``long_500k``: mamba positions are O(1)-state;
+attention positions with a sliding window only allocate a window-sized ring
+cache (mixtral); full-attention caches are allocated at S_max.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models.model import (
+    gather_weights,
+    num_repeats,
+    shard_act,
+    superblock_period,
+)
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Per-attention-layer cache length (ring-buffered for SWA)."""
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """ShapeDtypeStruct pytree for the decode cache (no allocation)."""
+    p = superblock_period(cfg)
+    r = num_repeats(cfg)
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    s_kv = cache_len(cfg, seq_len)
+    out: dict[str, Any] = {}
+    for j in range(p):
+        if cfg.mixer_at(j) == "attention":
+            kv = jax.ShapeDtypeStruct((r, batch, s_kv, cfg.num_kv_heads, hd), dt)
+            out[f"pos{j}"] = {"k": kv, "v": kv}
+        else:
+            conv, ssm = M2.mamba2_state_defs(cfg, batch)
+            out[f"pos{j}"] = {
+                "conv": jax.ShapeDtypeStruct((r,) + conv.shape, conv.dtype),
+                "ssm": jax.ShapeDtypeStruct((r,) + ssm.shape, ssm.dtype),
+            }
+    if cfg.kind == "encdec":
+        # precomputed cross-attention K/V over the encoded source
+        xkv = jax.ShapeDtypeStruct((r, batch, seq_len, cfg.num_kv_heads, hd), dt)
+        for j in range(p):
+            out[f"pos{j}"]["xk"] = xkv
+            out[f"pos{j}"]["xv"] = xkv
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        cache_specs(cfg, batch, seq_len),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _decode_attention(ap: dict, h: jax.Array, cache: dict, pos: jax.Array, cfg: ModelConfig):
+    """h: (B,1,D). Returns (out (B,1,D), new_cache)."""
+    b = h.shape[0]
+    hd = cfg.resolved_head_dim
+    q = (h @ ap["wq"]).reshape(b, 1, cfg.num_heads, hd)
+    k = (h @ ap["wk"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    v = (h @ ap["wv"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    positions = jnp.full((1,), pos, jnp.int32)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    s_kv = cache["k"].shape[1]  # (B, S_kv, n_kv, hd)
+    slot = pos % s_kv if cfg.sliding_window else pos
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    if cfg.sliding_window:
+        # ring buffer: all live slots are valid once pos >= s_kv; validity mask
+        kpos = jnp.arange(s_kv)
+        valid = jnp.where(pos >= s_kv, jnp.ones((s_kv,), bool), kpos <= pos)
+        logits_mask = jnp.where(valid, 0.0, L.NEG_INF)
+        out = _masked_decode_attn(q, new_k, new_v, logits_mask)
+    else:
+        kpos = jnp.arange(s_kv)
+        logits_mask = jnp.where(kpos <= pos, 0.0, L.NEG_INF)
+        out = _masked_decode_attn(q, new_k, new_v, logits_mask)
+    return out.reshape(b, 1, -1) @ ap["wo"], {"k": new_k, "v": new_v}
+
+
+def _masked_decode_attn(q, k, v, logits_mask):
+    """Single-query attention over the whole cache. q: (B,1,Hq,hd)."""
+    b, _, hq, hd = q.shape
+    s_kv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qh = (q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))).reshape(b, hkv, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(jnp.float32))
+    logits = logits + logits_mask[None, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def _decode_cross_attention(ap: dict, h: jax.Array, xk: jax.Array, xv: jax.Array, cfg):
+    b = h.shape[0]
+    hd = cfg.resolved_head_dim
+    q = (h @ ap["wq"]).reshape(b, 1, cfg.num_heads, hd)
+    out = _masked_decode_attn(q, xk, xv, jnp.zeros((xk.shape[1],), jnp.float32))
+    return out.reshape(b, 1, -1) @ ap["wo"]
+
+
+def decode_position(pparams: dict, x: jax.Array, pcache: dict, pos: jax.Array, cfg: ModelConfig):
+    """One layer, one token. x: (B,1,D)."""
+    h = L.apply_norm(pparams["norm1"], x, cfg.norm)
+    new_cache = dict(pcache)
+    if "attn" in pparams:
+        sub = {"k": pcache["k"], "v": pcache["v"]}
+        mix, upd = _decode_attention(pparams["attn"], h, sub, pos, cfg)
+        new_cache.update(upd)
+    else:
+        state = (pcache["conv"], pcache["ssm"])
+        mix, (conv, ssm) = M2.apply_mamba2(pparams["mamba"], h, cfg, state=state, return_state=True)
+        new_cache.update({"conv": conv, "ssm": ssm})
+    x = x + mix
+    if "xattn" in pparams:
+        hx = L.apply_norm(pparams["norm_x"], x, cfg.norm)
+        x = x + _decode_cross_attention(pparams["xattn"], hx, pcache["xk"], pcache["xv"], cfg)
+    if "moe" in pparams:
+        from repro.models.moe import apply_moe
+
+        h2 = L.apply_norm(pparams["norm2"], x, cfg.norm)
+        out, _ = apply_moe(pparams["moe"], h2, cfg)
+        x = x + out
+    elif "mlp" in pparams:
+        h2 = L.apply_norm(pparams["norm2"], x, cfg.norm)
+        x = x + L.apply_mlp(pparams["mlp"], h2, cfg.mlp)
+    return shard_act(x, "bsd"), new_cache
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,  # (B, 1) int32 — the token decoded last step
+    pos: jax.Array,  # () int32 — its absolute position
+    cfg: ModelConfig,
+    *,
+    gather_specs=None,
+) -> tuple[jax.Array, dict]:
+    """One decode step across the whole model. Returns (logits (B,V), cache)."""
+    from repro.models.model import embed_tokens, lm_head
+
+    x = embed_tokens(params, tokens, cfg)
+    p = superblock_period(cfg)
+
+    def body(x, slices):
+        new_slices = {}
+        for j in range(p):
+            specs = None if gather_specs is None else gather_specs[f"pos{j}"]
+            pp = gather_weights(slices[f"pos{j}"]["params"], specs)
+            x, nc = decode_position(pp, x, slices[f"pos{j}"]["cache"], pos, cfg)
+            new_slices[f"pos{j}"] = nc
+        return x, new_slices
+
+    xs = {
+        f"pos{j}": {"params": params["blocks"][f"pos{j}"], "cache": cache[f"pos{j}"]}
+        for j in range(p)
+    }
+    x, new_cache = jax.lax.scan(body, x, xs)
+    logits = lm_head(params, x, cfg)
+    return logits[:, 0], new_cache

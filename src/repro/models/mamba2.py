@@ -1,0 +1,162 @@
+"""Mamba-2 (SSD — state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD: quadratic attention-like compute within chunks of length Q and a
+linear ``lax.scan`` recurrence across chunks — O(S·Q) work, O(S) memory, which
+is what makes the ``long_500k`` shape tractable. Single-step recurrence for
+decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NONE, TP, ZERO, ParamDef, rmsnorm
+
+
+def mamba2_dims(cfg):
+    mc = cfg.mamba2
+    d_in = mc.expand * cfg.d_model
+    n_heads = d_in // mc.head_dim
+    conv_dim = d_in + 2 * mc.d_state
+    return d_in, n_heads, conv_dim
+
+
+def mamba2_defs(cfg) -> dict:
+    mc = cfg.mamba2
+    d = cfg.d_model
+    d_in, n_heads, conv_dim = mamba2_dims(cfg)
+    proj_out = 2 * d_in + 2 * mc.d_state + n_heads  # [z, x, B, C, dt]
+    return {
+        "in_proj": ParamDef((d, proj_out), (ZERO, TP)),
+        "conv_w": ParamDef((mc.d_conv, conv_dim), (NONE, TP), scale=0.1),
+        "conv_b": ParamDef((conv_dim,), (TP,), init="zeros"),
+        "A_log": ParamDef((n_heads,), (TP,), init="ones", dtype="float32"),
+        "D": ParamDef((n_heads,), (TP,), init="ones", dtype="float32"),
+        "dt_bias": ParamDef((n_heads,), (TP,), init="zeros", dtype="float32"),
+        "norm_scale": ParamDef((d_in,), (TP,), init="ones"),
+        "out_proj": ParamDef((d_in, d), (TP, ZERO)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C). Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else state
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(y + b), new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) -> (..., Q, Q) with out[i,j] = sum(a[j+1..i]), -inf above diag."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B,S,H,P) inputs (dt already folded in by caller? no — raw)
+    dt: jax.Array,  # (B,S,H) positive step sizes
+    a: jax.Array,  # (H,) negative decay rates (A = -exp(A_log))
+    b_mat: jax.Array,  # (B,S,N)
+    c_mat: jax.Array,  # (B,S,N)
+    chunk_size: int,
+    initial_state: jax.Array | None = None,
+):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk_size, s)
+    if s % q:
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // q
+
+    xdt = (x * dt[..., None]).astype(jnp.float32)  # dt-scaled input
+    adt = (a[None, None, :] * dt).astype(jnp.float32)  # (B,S,H) log-decay per step
+    # chunked views
+    xc = xdt.reshape(bsz, nc, q, h, p)
+    ac = adt.reshape(bsz, nc, q, h)
+    bc = b_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    a_cs = jnp.cumsum(ac, axis=2)  # (B,nc,Q,H)
+    # 1) intra-chunk (quadratic within chunk)
+    l_mat = jnp.exp(_segsum(jnp.moveaxis(ac, -1, 2)))  # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp", cc, bc, l_mat, xc)
+    # 2) per-chunk end states
+    decay_states = jnp.exp(a_cs[:, :, -1:, :] - a_cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, decay_states, xc)
+    # 3) inter-chunk recurrence (linear scan over chunks)
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])  # (B,nc,H)
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def body(carry, inp):
+        st, dec = inp  # st: (B,H,P,N), dec: (B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state *entering* this chunk
+
+    final_state, prev_states = jax.lax.scan(
+        body,
+        initial_state.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,P,N)
+    # 4) state -> output within chunk
+    state_decay = jnp.exp(a_cs)  # (B,nc,Q,H)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(bsz, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final_state
+
+
+def apply_mamba2(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    *,
+    state: tuple[jax.Array, jax.Array] | None = None,
+    return_state: bool = False,
+):
+    """x: (B,S,D) -> (B,S,D). ``state`` = (conv_state, ssm_state) for decode."""
+    mc = cfg.mamba2
+    d_in, n_heads, conv_dim = mamba2_dims(cfg)
+    b, s, _ = x.shape
+    proj = x @ params["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + mc.d_state, 2 * d_in + 2 * mc.d_state], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_state = state[0] if state is not None else None
+    conv_out, new_conv_state = _causal_conv(conv_in, params["conv_w"], params["conv_b"], conv_state)
+    xin, bmat, cmat = jnp.split(conv_out, [d_in, d_in + mc.d_state], axis=-1)
+    xh = xin.reshape(b, s, n_heads, mc.head_dim)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])  # (H,)
+    ssm_state = state[1] if state is not None else None
+    y, new_ssm_state = ssd_chunked(xh, dtp, a, bmat, cmat, mc.chunk_size, ssm_state)
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, (new_conv_state, new_ssm_state)
+    return out
+
+
+def mamba2_state_defs(cfg, batch: int):
+    """ShapeDtype templates for the decode state cache."""
+    mc = cfg.mamba2
+    d_in, n_heads, conv_dim = mamba2_dims(cfg)
+    return (
+        jax.ShapeDtypeStruct((batch, mc.d_conv - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        jax.ShapeDtypeStruct((batch, n_heads, mc.head_dim, mc.d_state), jnp.float32),
+    )

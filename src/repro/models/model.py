@@ -1,0 +1,419 @@
+"""Model assembly: superblocks, decoder / encoder-decoder forward, decode.
+
+A *superblock* is the smallest repeating unit of layers — ``lcm(len(mixer
+pattern), moe.every)`` layers (1 for uniform archs, 8 for Jamba). Parameters
+are stacked over superblock repeats so the layer stack lowers to a single
+``lax.scan`` regardless of depth; this is also the chunk granularity used by
+ProTrain's planner (paper §B.1 groups one transformer block per chunk).
+
+The layer stack is executed as a list of *runs* — contiguous repeat ranges
+sharing one (weights-buffered?, activation-policy) pair — which is how the
+planner's {n_persist, n_buffer, n_swap, n_checkpoint} choice is realized (see
+train/step_builder.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models.layers import NONE, TP, ZERO, LAYER, ParamDef
+
+ACT = "act"  # checkpoint_name for offloadable activations
+GATHERED_W = "gathered_w"  # checkpoint_name for gathered (unsharded) weights
+
+
+def superblock_period(cfg: ModelConfig) -> int:
+    p = len(cfg.mixer_pattern)
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.every)
+    return p
+
+
+def num_repeats(cfg: ModelConfig) -> int:
+    p = superblock_period(cfg)
+    assert cfg.num_layers % p == 0, (cfg.name, cfg.num_layers, p)
+    return cfg.num_layers // p
+
+
+# ---------------------------------------------------------------------------
+# Param definitions
+# ---------------------------------------------------------------------------
+def _position_defs(cfg: ModelConfig, pos: int, cross_attention: bool = False) -> dict:
+    """ParamDefs for one layer position within the superblock."""
+    defs: dict[str, Any] = {"norm1": L.norm_defs(cfg.d_model, cfg.norm)}
+    if cfg.mixer_at(pos) == "attention":
+        defs["attn"] = L.attention_defs(cfg)
+    else:
+        defs["mamba"] = M2.mamba2_defs(cfg)
+    if cross_attention:
+        defs["norm_x"] = L.norm_defs(cfg.d_model, cfg.norm)
+        defs["xattn"] = L.cross_attention_defs(cfg)
+    if cfg.moe_at(pos):
+        defs["norm2"] = L.norm_defs(cfg.d_model, cfg.norm)
+        defs["moe"] = MOE.moe_defs(cfg)
+    elif cfg.d_ff:
+        defs["norm2"] = L.norm_defs(cfg.d_model, cfg.norm)
+        defs["mlp"] = L.mlp_defs(cfg)
+    return defs
+
+
+def _stack_defs(defs, n: int):
+    """Prepend a stacked LAYER axis of size n to every ParamDef."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (LAYER,) + d.axes, init=d.init, scale=d.scale, dtype=d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    """Full parameter ParamDef pytree for the model."""
+    p = superblock_period(cfg)
+    r = num_repeats(cfg)
+    defs: dict[str, Any] = {
+        "embed": {"tok": ParamDef((cfg.vocab_size, cfg.d_model), (TP, ZERO), scale=0.02)},
+        "blocks": {
+            f"pos{j}": _stack_defs(_position_defs(cfg, j, cross_attention=cfg.kind == "encdec"), r)
+            for j in range(p)
+        },
+        "final_norm": L.norm_defs(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = {"w": ParamDef((cfg.d_model, cfg.vocab_size), (ZERO, TP), scale=0.02)}
+    if cfg.kind == "encdec":
+        defs["encoder"] = {
+            "blocks": _stack_defs(_position_defs(cfg, 0), cfg.encoder_layers),
+            "final_norm": L.norm_defs(cfg.d_model, cfg.norm),
+        }
+    if cfg.dtype != "bfloat16":
+        # ParamDefs default to bf16 compute dtype; explicit fp32 defs
+        # (A_log, router, ...) keep theirs.
+        defs = jax.tree.map(
+            lambda d: dataclasses.replace(d, dtype=cfg.dtype) if d.dtype == "bfloat16" else d,
+            defs,
+            is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+    return defs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return L.init_tree(param_defs(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hook (set by the step builder; no-op by default)
+# ---------------------------------------------------------------------------
+_ACT_SHARDER: Callable[[jax.Array, str], jax.Array] = lambda x, kind: x
+
+
+def set_activation_sharder(fn) -> None:
+    global _ACT_SHARDER
+    _ACT_SHARDER = fn
+
+
+def _pin_cotangent_dtype(x: jax.Array) -> jax.Array:
+    """Identity whose VJP casts the incoming cotangent back to x.dtype.
+
+    Mixed-precision transposes (fp32-accumulating einsums, fp32 loss heads)
+    otherwise promote dL/dx to fp32 at every block boundary — doubling the
+    backward activation traffic and the saved-residual stacks.
+    """
+
+    @jax.custom_vjp
+    def pin(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, ct):
+        return (ct.astype(x.dtype),)
+
+    pin.defvjp(fwd, bwd)
+    return pin(x)
+
+
+def shard_act(x: jax.Array, kind: str = "bsd") -> jax.Array:
+    if kind == "bsd":
+        x = _pin_cotangent_dtype(x)
+    return _ACT_SHARDER(x, kind)
+
+
+def gather_weights(params, specs=None):
+    """Mark weights as gathered at point-of-use (named for remat policies).
+
+    ``specs`` is an optional matching pytree of ``NamedSharding`` whose ZeRO
+    axes have been dropped (replicated): the ``with_sharding_constraint``
+    forces the all-gather here — per scanned superblock, i.e. chunk-wise, the
+    paper's gather granularity. For persistent runs specs is None (weights are
+    already replicated; the name alone is harmless).
+    """
+    if specs is None:
+        return jax.tree.map(lambda w: checkpoint_name(w, GATHERED_W), params)
+    # device_put (not with_sharding_constraint): it both forces the all-gather
+    # over the dropped ZeRO axes *and* moves host-resident chunks into HBM.
+    # The optimization barrier pins the gather *inside* the layer scan: without
+    # it XLA commutes slice-of-stack with all-gather and hoists the gather of
+    # the whole stacked run out of the loop — materializing every layer's
+    # weights at once (the exact pattern chunk-wise gathering must avoid).
+    params = jax.lax.optimization_barrier(params)
+    return jax.tree.map(
+        lambda w, s: checkpoint_name(w if s is None else jax.device_put(w, s), GATHERED_W),
+        params,
+        specs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Superblock forward
+# ---------------------------------------------------------------------------
+def apply_position(
+    pparams: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    pos_j: int,
+    *,
+    positions: jax.Array | None = None,
+    memory: jax.Array | None = None,
+    attn_impl: str = "blockwise",
+) -> tuple[jax.Array, jax.Array]:
+    """One layer (superblock position). Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = shard_act(x, "enter")  # SP: gather seq-sharded boundary for compute
+    h = L.apply_norm(pparams["norm1"], x, cfg.norm)
+    h = checkpoint_name(h, ACT)
+    if "attn" in pparams:
+        mix = L.attention_block(pparams["attn"], h, cfg, positions=positions, impl=attn_impl)
+    else:
+        mix = M2.apply_mamba2(pparams["mamba"], h, cfg)
+    x = x + checkpoint_name(mix, ACT)
+    if memory is not None and "xattn" in pparams:
+        hx = L.apply_norm(pparams["norm_x"], x, cfg.norm)
+        x = x + checkpoint_name(L.cross_attention_block(pparams["xattn"], hx, memory, cfg), ACT)
+    if "moe" in pparams:
+        h2 = L.apply_norm(pparams["norm2"], x, cfg.norm)
+        out, moe_aux = MOE.apply_moe(pparams["moe"], h2, cfg)
+        x = x + checkpoint_name(out, ACT)
+        aux = aux + moe_aux
+    elif "mlp" in pparams:
+        h2 = L.apply_norm(pparams["norm2"], x, cfg.norm)
+        x = x + checkpoint_name(L.apply_mlp(pparams["mlp"], h2, cfg.mlp), ACT)
+    return shard_act(x), aux
+
+
+def apply_superblock(
+    block_params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    gather_specs=None,
+    remat_policy=None,
+    **kw,
+):
+    """block_params: {posJ: params-for-one-repeat}. Returns (x, aux).
+
+    ``remat_policy``: optional jax.checkpoint policy applied *per position*
+    (per transformer layer) — the paper's per-block activation management
+    granularity. The gather is inside the rematted region, so gathered-weight
+    save/offload follows the same policy (n_buffer semantics).
+    """
+    aux = jnp.zeros((), jnp.float32)
+
+    def one(j, x):
+        specs = None if gather_specs is None else gather_specs[f"pos{j}"]
+        pp = gather_weights(block_params[f"pos{j}"], specs)
+        return apply_position(pp, x, cfg, j, **kw)
+
+    for j in range(superblock_period(cfg)):
+        fn = one if remat_policy is None else jax.checkpoint(one, policy=remat_policy, static_argnums=(0,))
+        x, a = fn(j, x)
+        aux = aux + a
+    return x, aux
+
+
+REMAT_POLICIES: dict[tuple[str, bool], Any] = {}
+
+
+def _remat_policy(act_policy: str, buffered: bool):
+    """Map (activation policy, weights-buffered?) to a jax.checkpoint policy."""
+    key = (act_policy, buffered)
+    if key in REMAT_POLICIES:
+        return REMAT_POLICIES[key]
+    cp = jax.checkpoint_policies
+    if act_policy == "none":
+        pol = cp.everything_saveable if buffered else cp.save_anything_except_these_names(GATHERED_W)
+    elif act_policy == "checkpoint":
+        pol = cp.save_only_these_names(GATHERED_W) if buffered else cp.nothing_saveable
+    elif act_policy == "swap":
+        pol = cp.save_and_offload_only_these_names(
+            names_which_can_be_saved=[GATHERED_W] if buffered else [],
+            names_which_can_be_offloaded=[ACT],
+            offload_src="device",
+            offload_dst="pinned_host",
+        )
+    else:
+        raise ValueError(act_policy)
+    REMAT_POLICIES[key] = pol
+    return pol
+
+
+@dataclasses.dataclass
+class Run:
+    """A contiguous range of superblock repeats sharing one policy."""
+
+    params: dict  # stacked over this run's repeats
+    n_repeats: int
+    act_policy: str = "none"  # none | checkpoint | swap
+    buffered: bool = True  # gathered weights saved fwd->bwd?
+    persistent: bool = False  # params replicated over zero axes (no gather)
+    gather_specs: Any = None  # per-repeat pytree of NamedSharding (ZeRO dropped)
+    ckpt_group: int = 1  # remat region size in superblock repeats (sqrt(n) trade)
+
+
+def apply_runs(
+    runs: list[Run],
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    memory: jax.Array | None = None,
+    attn_impl: str = "blockwise",
+) -> tuple[jax.Array, jax.Array]:
+    """Execute the layer stack as policy runs of scanned superblocks."""
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for run in runs:
+        # per-position (per-layer) remat policy; None = save everything
+        pol = (
+            None
+            if run.act_policy == "none" and run.buffered
+            else _remat_policy(run.act_policy, run.buffered)
+        )
+        g = run.ckpt_group if run.act_policy == "checkpoint" else 1
+        g = max(1, min(g, run.n_repeats))
+        while run.n_repeats % g:
+            g -= 1  # group must tile the run
+
+        if g == 1:
+            def body(carry, bp, _run=run, _pol=pol):
+                x, aux = carry
+                x, a = apply_superblock(
+                    bp, x, cfg, gather_specs=_run.gather_specs, remat_policy=_pol,
+                    memory=memory, attn_impl=attn_impl,
+                )
+                return (x, aux + a), None
+
+            scan_params = run.params
+        else:
+            # grouped remat: one checkpoint region spans g superblocks, so the
+            # scan saves one boundary per g layers (recompute working set: g)
+            def region(carry, gp, _run=run):
+                x, aux = carry
+                for i in range(_run.ckpt_group):
+                    bp = jax.tree.map(lambda a, _i=i: a[_i], gp)
+                    x, a = apply_superblock(
+                        bp, x, cfg, gather_specs=_run.gather_specs,
+                        remat_policy=None, memory=memory, attn_impl=attn_impl,
+                    )
+                    aux = aux + a
+                return (x, aux)
+
+            region_ck = jax.checkpoint(region, policy=_remat_policy(run.act_policy, run.buffered))
+
+            def body(carry, gp, _f=region_ck):
+                return _f(carry, gp), None
+
+            scan_params = jax.tree.map(
+                lambda a, _g=g: a.reshape(a.shape[0] // _g, _g, *a.shape[1:]),
+                run.params,
+            )
+
+        n_iters = run.n_repeats // g
+        if n_iters == 1:
+            (x, aux_total), _ = body(
+                (x, aux_total), jax.tree.map(lambda a: a[0], scan_params)
+            )
+        else:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), scan_params)
+    return x, aux_total
+
+
+def default_runs(cfg: ModelConfig, params: dict) -> list[Run]:
+    """Single fully-resident run (no ZeRO, no remat) — small-model default."""
+    return [Run(params=params["blocks"], n_repeats=num_repeats(cfg), persistent=True)]
+
+
+# ---------------------------------------------------------------------------
+# Full-model forward
+# ---------------------------------------------------------------------------
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    emb = params["embed"]["tok"]
+    return shard_act(jnp.take(emb, tokens, axis=0), "bsd")
+
+
+def lm_head(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    w = params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]["w"]
+    return shard_act(x @ w, "logits")
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig, gather_specs=None) -> jax.Array:
+    """Encoder stack over precomputed frontend embeddings (B, S_src, D)."""
+    enc = params["encoder"]
+    x = shard_act(frames, "bsd")
+
+    def body(carry, bp):
+        x = carry
+        pp = gather_weights(bp, gather_specs)
+        h = L.apply_norm(pp["norm1"], x, cfg.norm)
+        b, s, d = h.shape
+        hd = cfg.resolved_head_dim
+        q = (h @ pp["attn"]["wq"]).reshape(b, s, cfg.num_heads, hd)
+        k = (h @ pp["attn"]["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+        v = (h @ pp["attn"]["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+        pos = jnp.arange(s)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+        o = L.blockwise_attention(q, k, v, causal=False, block_kv=min(1024, s))
+        x = x + checkpoint_name(o.reshape(b, s, -1) @ pp["attn"]["wo"], ACT)
+        h2 = L.apply_norm(pp["norm2"], x, cfg.norm)
+        x = x + checkpoint_name(L.apply_mlp(pp["mlp"], h2, cfg.mlp), ACT)
+        return shard_act(x), None
+
+    body_ck = jax.checkpoint(body, policy=_remat_policy("checkpoint", True))
+    x, _ = jax.lax.scan(body_ck, x, enc["blocks"])
+    return L.apply_norm(enc["final_norm"], x, cfg.norm)
+
+
+def forward(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    runs: list[Run] | None = None,
+    attn_impl: str = "blockwise",
+    encoder_gather_specs=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Training/prefill forward. ``batch`` keys: tokens (B,S) and optionally
+    frames (B,S_src,D) [encdec] or patches (B,S_img,D) [vlm].
+    Returns (hidden (B,S,D), aux_loss)."""
+    x = embed_tokens(params, batch["tokens"], cfg)
+    if cfg.frontend == "vision_patches" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    memory = None
+    if cfg.kind == "encdec":
+        memory = encode(params, batch["frames"], cfg, gather_specs=encoder_gather_specs)
+    if runs is None:
+        runs = default_runs(cfg, params)
+    x, aux = apply_runs(runs, x, cfg, memory=memory, attn_impl=attn_impl)
+    if cfg.frontend == "vision_patches" and "patches" in batch:
+        x = x[:, batch["patches"].shape[1] :]
+    return x, aux

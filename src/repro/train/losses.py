@@ -1,0 +1,99 @@
+"""Loss functions.
+
+Chunked cross-entropy never materializes the full (B, S, V) logits tensor: a
+scan over sequence chunks keeps live logits at (B, ce_chunk, V). The custom
+VJP recomputes logits per chunk in the backward pass (flash-CE) and — the
+part XLA will not do for us — accumulates the head-weight gradient under an
+explicit sharding constraint. Without it the transpose of the forward scan
+carries a (V, D) fp32 accumulator partitioned only over whatever axis XLA
+guessed, which at 128k-256k vocabularies is gigabytes per device.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunk(x, n, c):
+    return jnp.moveaxis(x.reshape(x.shape[0], n, c, *x.shape[2:]), 1, 0)
+
+
+def _ce_forward(h, w, labels, c):
+    b, s, d = h.shape
+    n = s // c
+    hc = _chunk(h, n, c)  # (n, B, c, D)
+    lc = _chunk(labels, n, c)
+
+    def body(total, inp):
+        hh, ll = inp
+        logits = (hh @ w).astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return total + jnp.sum(lse - picked), lse
+
+    total, lses = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (b * s), lses  # lses: (n, B, c)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _ce(h, w, labels, c, w_acc_sharding):
+    return _ce_forward(h, w, labels, c)[0]
+
+
+def _ce_fwd(h, w, labels, c, w_acc_sharding):
+    loss, lses = _ce_forward(h, w, labels, c)
+    return loss, (h, w, labels, lses)
+
+
+def _ce_bwd(c, w_acc_sharding, res, g):
+    h, w, labels, lses = res
+    b, s, d = h.shape
+    n = s // c
+    hc = _chunk(h, n, c)
+    lc = _chunk(labels, n, c)
+    scale = g / (b * s)
+
+    dw0 = jnp.zeros(w.shape, jnp.float32)
+    if w_acc_sharding is not None:
+        dw0 = jax.lax.with_sharding_constraint(dw0, w_acc_sharding)
+
+    def body(dw_acc, inp):
+        hh, ll, lse = inp
+        logits = (hh @ w).astype(jnp.float32)
+        p = jnp.exp(logits - lse[..., None])  # softmax (B, c, V)
+        onehot_sub = jnp.zeros_like(p).at[
+            jnp.arange(p.shape[0])[:, None], jnp.arange(c)[None, :], ll
+        ].set(1.0)
+        dlogits = ((p - onehot_sub) * scale).astype(h.dtype)
+        dh = dlogits @ w.T  # (B, c, D) bf16
+        dw_new = dw_acc + jnp.einsum(
+            "bcd,bcv->dv", hh, dlogits, preferred_element_type=jnp.float32
+        )
+        if w_acc_sharding is not None:
+            dw_new = jax.lax.with_sharding_constraint(dw_new, w_acc_sharding)
+        return dw_new, dh
+
+    dw, dhs = jax.lax.scan(body, dw0, (hc, lc, lses))
+    dh = jnp.moveaxis(dhs, 0, 1).reshape(h.shape)
+    return dh, dw.astype(w.dtype), None
+
+
+_ce.defvjp(_ce_fwd, _ce_bwd)
+
+
+def chunked_cross_entropy(
+    h: jax.Array,  # (B, S, D) final hidden states (already normed)
+    head_w: jax.Array,  # (D, V)
+    labels: jax.Array,  # (B, S) int32
+    *,
+    ce_chunk: int = 2048,
+    w_acc_sharding: Any = None,
+) -> jax.Array:
+    b, s, d = h.shape
+    c = min(ce_chunk, s)
+    if s % c:
+        c = s  # fall back to single chunk for odd lengths
+    return _ce(h, head_w, labels, c, w_acc_sharding)

@@ -1,0 +1,601 @@
+"""Build jit-able train/serve steps that realize a MemoryPlan.
+
+This is where ProTrain's plan becomes an XLA program:
+
+  * chunk placement  -> per-run parameter NamedShardings (persist = replicated
+    over ZeRO axes; hbm = sharded; host = sharded + pinned_host memory kind)
+  * n_buffer         -> gathered-weight save policy (re-gather in BWD or not)
+  * n_swap/n_ckpt    -> per-position jax.checkpoint policies (offload/remat)
+  * microbatch       -> gradient-accumulation scan
+  * host_optimizer   -> optimizer states of host chunks live in pinned_host
+
+The returned artifacts carry ShapeDtypeStruct specs for every input so the
+multi-pod dry-run can ``.lower().compile()`` without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.plan import MemoryPlan
+from repro.dist import sharding as SH
+from repro.models import kvcache as KV
+from repro.models import model as M
+from repro.models.layers import ParamDef
+from repro.optim import adam as OPT
+from repro.train.losses import chunked_cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# Plan -> run layout
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RunLayout:
+    start: int  # first superblock repeat (== chunk index - 1)
+    length: int
+    placement: str  # persist | hbm | host
+    buffered: bool
+    act_policy: str  # none | checkpoint | swap
+
+
+def plan_runs(plan: MemoryPlan, n_repeats: int) -> list[RunLayout]:
+    runs: list[RunLayout] = []
+    for r in range(n_repeats):
+        chunk = r + 1  # chunk 0 is the embedding
+        key = (
+            plan.chunk_placement(chunk),
+            plan.chunk_buffered(chunk),
+            plan.block_policy(min(r, plan.n_blocks - 1)),
+        )
+        if runs and (runs[-1].placement, runs[-1].buffered, runs[-1].act_policy) == key:
+            runs[-1].length += 1
+        else:
+            runs.append(RunLayout(r, 1, *key))
+    return runs
+
+
+def _slice_run_defs(block_defs, length: int):
+    """Stacked (R, ...) ParamDefs -> (length, ...) defs for one run."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=(length,) + d.shape[1:]),
+        block_defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _per_repeat_defs(block_defs):
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=d.shape[1:], axes=d.axes[1:]),
+        block_defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Step artifacts
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StepArtifacts:
+    fn: Callable  # (state, batch) -> (state, metrics)   [or serve variants]
+    state_specs: Any  # ShapeDtypeStruct pytree (with shardings)
+    batch_specs: Any
+    state_shardings: Any
+    batch_shardings: Any
+    plan: MemoryPlan
+    runs: list[RunLayout]
+    init: Callable | None = None  # (key) -> state, concrete (small models)
+
+    def lower(self, donate: bool = True):
+        jfn = jax.jit(self.fn, donate_argnums=(0,) if donate else ())
+        return jfn.lower(self.state_specs, self.batch_specs)
+
+
+def _opt_placement(placement: str, plan: MemoryPlan) -> str:
+    """Optimizer-state placement for a chunk placement."""
+    if placement == "persist":
+        return "zero1" if plan.zero1_persistent else "persist"
+    return placement
+
+
+def _opt_sharding(d: ParamDef, mesh, placement: str, plan: MemoryPlan) -> NamedSharding:
+    op = _opt_placement(placement, plan)
+    if op == "zero1":
+        return SH.sharding_for(d, mesh, placement="hbm", dp_only=plan.dp_only)
+    return SH.sharding_for(d, mesh, placement=op, dp_only=plan.dp_only)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    plan: MemoryPlan,
+    mesh,
+    shape: ShapeConfig,
+    *,
+    adam: OPT.AdamConfig | None = None,
+    attn_impl: str = "blockwise",
+    ce_chunk: int = 2048,
+    lr_schedule: Callable | None = None,
+) -> StepArtifacts:
+    adam = adam or OPT.AdamConfig()
+    period = M.superblock_period(cfg)
+    n_rep = M.num_repeats(cfg)
+    runs_layout = plan_runs(plan, n_rep)
+    defs = M.param_defs(cfg)
+    head_chunk = plan.chunk_placement(plan.n_chunks - 1)
+    embed_chunk = plan.chunk_placement(0)
+    dp = plan.dp_only
+
+    def param_place(pl: str) -> str:
+        # ZeRO-Offload split: bf16 params stay in HBM; only opt states go host
+        return "hbm" if (pl == "host" and not plan.host_params) else pl
+
+    head_pchunk = param_place(head_chunk)
+    embed_pchunk = param_place(embed_chunk)
+
+    # --- parameter defs & shardings, organized by run ----------------------
+    p_defs: dict[str, Any] = {
+        "embed": defs["embed"],
+        "final_norm": defs["final_norm"],
+        "runs": [_slice_run_defs(defs["blocks"], r.length) for r in runs_layout],
+    }
+    if "head" in defs:
+        p_defs["head"] = defs["head"]
+    if "encoder" in defs:
+        p_defs["encoder"] = defs["encoder"]
+
+    p_shard: dict[str, Any] = {
+        "embed": SH.tree_shardings(defs["embed"], mesh, placement=embed_pchunk, dp_only=dp),
+        "final_norm": SH.tree_shardings(defs["final_norm"], mesh, placement=head_pchunk, dp_only=dp),
+        "runs": [
+            SH.tree_shardings(p_defs["runs"][i], mesh, placement=param_place(r.placement), dp_only=dp)
+            for i, r in enumerate(runs_layout)
+        ],
+    }
+    if "head" in defs:
+        p_shard["head"] = SH.tree_shardings(defs["head"], mesh, placement=head_pchunk, dp_only=dp)
+    if "encoder" in defs:
+        p_shard["encoder"] = SH.tree_shardings(defs["encoder"], mesh, placement=embed_pchunk, dp_only=dp)
+
+    # --- optimizer state shardings (fp32 master/m/v) ------------------------
+    def opt_tree(fn_placement):
+        out = {
+            "embed": jax.tree.map(
+                lambda d: fn_placement(d, embed_chunk), defs["embed"],
+                is_leaf=lambda x: isinstance(x, ParamDef)),
+            "final_norm": jax.tree.map(
+                lambda d: fn_placement(d, head_chunk), defs["final_norm"],
+                is_leaf=lambda x: isinstance(x, ParamDef)),
+            "runs": [
+                jax.tree.map(lambda d, _r=r: fn_placement(d, _r.placement), p_defs["runs"][i],
+                             is_leaf=lambda x: isinstance(x, ParamDef))
+                for i, r in enumerate(runs_layout)
+            ],
+        }
+        if "head" in defs:
+            out["head"] = jax.tree.map(lambda d: fn_placement(d, head_chunk), defs["head"],
+                                       is_leaf=lambda x: isinstance(x, ParamDef))
+        if "encoder" in defs:
+            out["encoder"] = jax.tree.map(lambda d: fn_placement(d, embed_chunk), defs["encoder"],
+                                          is_leaf=lambda x: isinstance(x, ParamDef))
+        return out
+
+    def fp32_def(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(d, dtype="float32")
+
+    o_shard_one = opt_tree(lambda d, pl: _opt_sharding(d, mesh, pl, plan))
+    o_defs_one = jax.tree.map(fp32_def, p_defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    opt_defs = {"master": o_defs_one, "m": o_defs_one, "v": o_defs_one}
+    opt_shard = {"master": o_shard_one, "m": o_shard_one, "v": o_shard_one}
+
+    # host-offloaded leaves: (param shard, opt host shard, opt device shard)
+    def host_entry(d: ParamDef, pl: str):
+        if pl != "host" or not plan.host_optimizer:
+            return None
+        df = fp32_def(d)
+        return (
+            SH.sharding_for(d, mesh, placement=param_place("host"), dp_only=dp),
+            SH.sharding_for(df, mesh, placement="host", dp_only=dp),
+            SH.sharding_for(df, mesh, placement="hbm", dp_only=dp),
+        )
+
+    host_plan_flat = [
+        host_entry(d, pl)
+        for d, pl in zip(
+            jax.tree.leaves(p_defs, is_leaf=lambda x: isinstance(x, ParamDef)),
+            jax.tree.leaves(
+                opt_tree(lambda d, pl: pl), is_leaf=lambda x: isinstance(x, str)
+            ),
+        )
+    ]
+
+    state_specs = {
+        "params": SH.tree_specs(p_defs, p_shard),
+        "opt": {
+            **{k: SH.tree_specs(opt_defs[k], opt_shard[k]) for k in ("master", "m", "v")},
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_shardings = {
+        "params": p_shard,
+        "opt": {**opt_shard, "count": NamedSharding(mesh, P())},
+        "step": NamedSharding(mesh, P()),
+    }
+
+    # --- batch specs ---------------------------------------------------------
+    bsh = SH.batch_sharding(mesh, 2, dp_only=dp)
+    gb, sl = shape.global_batch, shape.seq_len
+    batch_specs: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((gb, sl), jnp.int32, sharding=bsh),
+        "labels": jax.ShapeDtypeStruct((gb, sl), jnp.int32, sharding=bsh),
+    }
+    bsh3 = SH.batch_sharding(mesh, 3, dp_only=dp)
+    if cfg.kind == "encdec":
+        batch_specs["frames"] = jax.ShapeDtypeStruct(
+            (gb, sl, cfg.d_model), jnp.dtype(cfg.dtype), sharding=bsh3
+        )
+    if cfg.frontend == "vision_patches":
+        n_patch = min(1024, sl)
+        batch_specs["patches"] = jax.ShapeDtypeStruct(
+            (gb, n_patch, cfg.d_model), jnp.dtype(cfg.dtype), sharding=bsh3
+        )
+    batch_shardings = jax.tree.map(lambda s: s.sharding, batch_specs,
+                                   is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    # --- gather specs per run (point-of-use all-gather) ---------------------
+    per_rep = _per_repeat_defs(defs["blocks"])
+    gather_specs = [
+        SH.tree_gather_shardings(defs["blocks"], mesh,
+                                 persistent=r.placement == "persist", dp_only=dp)
+        for r in runs_layout
+    ]
+    enc_gather = None
+    if "encoder" in defs:
+        enc_gather = SH.tree_gather_shardings(
+            defs["encoder"]["blocks"], mesh, persistent=embed_chunk == "persist",
+            dp_only=dp,
+        )
+
+    # Non-run parameter groups (embed / final_norm / head / encoder norm) need
+    # an explicit device fetch when host-placed (and an explicit gather point
+    # for the sharded head); runs handle this inside gather_weights.
+    def _fetch_specs(subtree_defs, placement, force=False):
+        if placement != "host" and not force:
+            return None
+        return jax.tree.map(lambda d: SH.gather_sharding(d, mesh, dp_only=dp), subtree_defs,
+                            is_leaf=lambda x: isinstance(x, ParamDef))
+
+    fetch_specs = {
+        "embed": _fetch_specs(defs["embed"], embed_pchunk),
+        "final_norm": _fetch_specs(defs["final_norm"], head_pchunk),
+    }
+    if "head" in defs:
+        fetch_specs["head"] = _fetch_specs(defs["head"], head_pchunk,
+                                           force=head_pchunk != "persist")
+    if "encoder" in defs:
+        fetch_specs["encoder_final_norm"] = _fetch_specs(
+            defs["encoder"]["final_norm"], embed_pchunk)
+
+    def fetch(params):
+        out = dict(params)
+        for key in ("embed", "final_norm", "head"):
+            spec = fetch_specs.get(key)
+            if spec is not None and key in out:
+                out[key] = jax.tree.map(jax.device_put, out[key], spec)
+        if fetch_specs.get("encoder_final_norm") is not None:
+            enc = dict(out["encoder"])
+            enc["final_norm"] = jax.tree.map(
+                jax.device_put, enc["final_norm"], fetch_specs["encoder_final_norm"]
+            )
+            out["encoder"] = enc
+        return out
+
+    sharder = SH.make_activation_sharder(mesh, plan)
+
+    def make_runs(params) -> list[M.Run]:
+        return [
+            M.Run(
+                params=params["runs"][i],
+                n_repeats=r.length,
+                act_policy=r.act_policy,
+                buffered=r.buffered,
+                persistent=r.placement == "persist",
+                gather_specs=gather_specs[i],
+                ckpt_group=plan.ckpt_group,
+            )
+            for i, r in enumerate(runs_layout)
+        ]
+
+    # sharding for the CE head-grad accumulator (see losses.py): matches the
+    # head weight as it enters the loss (gathered over ZeRO, sharded over TP)
+    zero_axes = SH.batch_axes(mesh, dp)
+    tp_axis = None if dp else ("model" if "model" in mesh.axis_names else None)
+    if cfg.tie_embeddings:
+        w_acc_sharding = NamedSharding(mesh, P(zero_axes or None, tp_axis))
+    else:
+        w_acc_sharding = NamedSharding(mesh, P(None, tp_axis))
+
+    def loss_fn(params, batch):
+        M.set_activation_sharder(sharder)
+        fparams = fetch(params)
+        h, aux = M.forward(
+            fparams, batch, cfg, runs=make_runs(params), attn_impl=attn_impl,
+            encoder_gather_specs=enc_gather,
+        )
+        from repro.models.layers import apply_norm
+
+        h = M.shard_act(h, "enter")  # SP: back to batch-only for the CE scan
+        h = apply_norm(fparams["final_norm"], h, cfg.norm)
+        w = fparams["embed"]["tok"].T if cfg.tie_embeddings else fparams["head"]["w"]
+        loss = chunked_cross_entropy(
+            h, w, batch["labels"], ce_chunk=ce_chunk, w_acc_sharding=w_acc_sharding
+        )
+        return loss + aux.astype(jnp.float32), loss
+
+    # gradient shardings: same partitioning as params, but always in device
+    # memory (host-chunk grads are reduce-scattered on device, then the
+    # optimizer round-trips the states). Without this constraint the transpose
+    # of the point-of-use gather leaves cotangents unsharded and XLA happily
+    # materializes replicated full-model gradients.
+    g_shard = jax.tree.map(
+        lambda s: NamedSharding(s.mesh, s.spec), p_shard,
+        is_leaf=lambda x: isinstance(x, NamedSharding),
+    )
+
+    def pin_grads(grads):
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, g_shard)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        mb = plan.microbatch
+
+        if mb == 1:
+            (total, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            grads = pin_grads(grads)
+        else:
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_batch):
+                g_acc, l_acc = carry
+                (tot, _ce), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb_batch)
+                g = pin_grads(g)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + tot), None
+
+            zeros = pin_grads(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, total), _ = jax.lax.scan(acc_body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = pin_grads(jax.tree.map(lambda g: g / mb, grads))
+            total = total / mb
+            ce = total
+
+        lr = lr_schedule(state["step"]) if lr_schedule else adam.lr
+        new_params, new_opt, gnorm = OPT.adam_update(
+            params, grads, state["opt"], adam, lr, host_plan=host_plan_flat
+        )
+        # keep shardings/memory kinds pinned through the update
+        new_params = jax.tree.map(jax.device_put, new_params, p_shard)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = {"loss": total, "ce": ce, "grad_norm": gnorm, "lr": jnp.asarray(lr)}
+        return new_state, metrics
+
+    def init(key):
+        flat_defs = p_defs
+        from repro.models.layers import init_tree
+
+        params = init_tree(flat_defs, key)
+        params = jax.tree.map(jax.device_put, params, p_shard)
+        opt = OPT.init_opt_state(params)
+        opt = {
+            "master": jax.tree.map(jax.device_put, opt["master"], opt_shard["master"]),
+            "m": jax.tree.map(jax.device_put, opt["m"], opt_shard["m"]),
+            "v": jax.tree.map(jax.device_put, opt["v"], opt_shard["v"]),
+            "count": opt["count"],
+        }
+        state = {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+        # identical constants (m/v zeros, step/count scalars) may share device
+        # buffers, which breaks donation ("donate the same buffer twice")
+        return jax.tree.map(lambda x: x.copy(), state)
+
+    return StepArtifacts(
+        fn=step_fn,
+        state_specs=state_specs,
+        batch_specs=batch_specs,
+        state_shardings=state_shardings,
+        batch_shardings=batch_shardings,
+        plan=plan,
+        runs=runs_layout,
+        init=init,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving steps (prefill / decode)
+# ---------------------------------------------------------------------------
+def build_serve_params(cfg: ModelConfig, plan: MemoryPlan, mesh):
+    """Serving keeps weights only; plan decides persist vs gathered chunks."""
+    defs = M.param_defs(cfg)
+    n_rep = M.num_repeats(cfg)
+    runs_layout = plan_runs(plan, n_rep)
+    head_chunk = plan.chunk_placement(plan.n_chunks - 1)
+    embed_chunk = plan.chunk_placement(0)
+    dp = plan.dp_only
+    # serving has no optimizer states: host placement == weights on host
+    head_pchunk, embed_pchunk = head_chunk, embed_chunk
+    p_defs = {
+        "embed": defs["embed"],
+        "final_norm": defs["final_norm"],
+        # serving keeps the canonical stacked layout (single run per placement
+        # is meaningless without buffering semantics) but honors placement
+        "blocks": defs["blocks"],
+    }
+    blocks_placement = plan.chunk_placement(1)
+    p_shard = {
+        "embed": SH.tree_shardings(defs["embed"], mesh, placement=embed_pchunk, dp_only=dp),
+        "final_norm": SH.tree_shardings(defs["final_norm"], mesh, placement=head_pchunk, dp_only=dp),
+        "blocks": SH.tree_shardings(defs["blocks"], mesh, placement=blocks_placement),
+    }
+    if "head" in defs:
+        p_defs["head"] = defs["head"]
+        p_shard["head"] = SH.tree_shardings(defs["head"], mesh, placement=head_pchunk, dp_only=dp)
+    if "encoder" in defs:
+        p_defs["encoder"] = defs["encoder"]
+        p_shard["encoder"] = SH.tree_shardings(defs["encoder"], mesh, placement=embed_pchunk, dp_only=dp)
+    gather = SH.tree_gather_shardings(defs["blocks"], mesh,
+                                      persistent=blocks_placement == "persist")
+
+    def _fs(subtree_defs, placement, force=False):
+        if placement != "host" and not force:
+            return None
+        return jax.tree.map(lambda d: SH.gather_sharding(d, mesh), subtree_defs,
+                            is_leaf=lambda x: isinstance(x, ParamDef))
+
+    fetch_specs = {
+        "embed": _fs(defs["embed"], embed_chunk),
+        "final_norm": _fs(defs["final_norm"], head_chunk),
+    }
+    if "head" in defs:
+        fetch_specs["head"] = _fs(defs["head"], head_chunk, force=head_chunk != "persist")
+
+    def fetch(params):
+        out = dict(params)
+        for key in ("embed", "final_norm", "head"):
+            spec = fetch_specs.get(key)
+            if spec is not None and key in out:
+                out[key] = jax.tree.map(jax.device_put, out[key], spec)
+        return out
+
+    return p_defs, p_shard, gather, fetch
+
+
+def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConfig) -> StepArtifacts:
+    p_defs, p_shard, gather, fetch = build_serve_params(cfg, plan, mesh)
+    sharder = SH.make_activation_sharder(mesh, plan)
+    bsz = shape.global_batch
+
+    cache_spec_tree = KV.cache_specs(cfg, bsz, shape.seq_len)
+    ba = SH.batch_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fits(dim: int, axes) -> bool:
+        if axes is None:
+            return False
+        names = (axes,) if isinstance(axes, str) else axes
+        n = 1
+        for a in names:
+            n *= sizes[a]
+        return dim % n == 0 and dim >= n
+
+    def cache_sharding(name: str, s: jax.ShapeDtypeStruct) -> NamedSharding:
+        """Attention caches (R,B,S,kv,hd): batch over ZeRO axes when divisible;
+        the sequence dim takes TP (and absorbs the ZeRO axes too for
+        single-sequence long-context decode, where batch cannot shard)."""
+        shp = s.shape
+        batch_ax = ba if fits(shp[1], ba) else None
+        if name in ("k", "v", "xk", "xv"):
+            seq_ax = tp if batch_ax is not None else tuple(
+                a for a in ((ba or ()) + ((tp,) if tp else ())) if a
+            ) or None
+            if not fits(shp[2], seq_ax):
+                seq_ax = tp if fits(shp[2], tp) else None
+            return NamedSharding(mesh, P(None, batch_ax, seq_ax, None, None))
+        if name == "conv":  # (R, B, K, conv_dim)
+            ch = tp if fits(shp[3], tp) else None
+            return NamedSharding(mesh, P(None, batch_ax, None, ch))
+        if name == "ssm":  # (R, B, H, P, N)
+            h = tp if fits(shp[2], tp) else None
+            return NamedSharding(mesh, P(None, batch_ax, h, None, None))
+        raise KeyError(name)
+
+    cache_shard = {
+        pos: {name: cache_sharding(name, s) for name, s in entry.items()}
+        for pos, entry in cache_spec_tree.items()
+    }
+    tok_batch_ax = ba if fits(bsz, ba) else None
+    cache_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_spec_tree, cache_shard,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+    state_specs = {
+        "params": SH.tree_specs(p_defs, p_shard),
+        "cache": cache_sds,
+    }
+    batch_specs = {
+        "tokens": jax.ShapeDtypeStruct(
+            (bsz, 1), jnp.int32, sharding=NamedSharding(mesh, P(tok_batch_ax, None))
+        ),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+    def step_fn(state, batch):
+        M.set_activation_sharder(sharder)
+        fparams = fetch(state["params"])
+        logits, new_cache = KV.decode_step(
+            fparams, state["cache"], batch["tokens"], batch["pos"], cfg,
+            gather_specs=gather,
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return {"params": state["params"], "cache": new_cache}, next_tok
+
+    return StepArtifacts(
+        fn=step_fn,
+        state_specs=state_specs,
+        batch_specs=batch_specs,
+        state_shardings={"params": p_shard, "cache": cache_shard},
+        batch_shardings=None,
+        plan=plan,
+        runs=plan_runs(plan, M.num_repeats(cfg)),
+    )
+
+
+def build_prefill_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConfig) -> StepArtifacts:
+    p_defs, p_shard, gather, fetch = build_serve_params(cfg, plan, mesh)
+    sharder = SH.make_activation_sharder(mesh, plan)
+    gb, sl = shape.global_batch, shape.seq_len
+    bsh = SH.batch_sharding(mesh, 2)
+    batch_specs: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((gb, sl), jnp.int32, sharding=bsh),
+    }
+    if cfg.kind == "encdec":
+        batch_specs["frames"] = jax.ShapeDtypeStruct(
+            (gb, sl, cfg.d_model), jnp.dtype(cfg.dtype), sharding=SH.batch_sharding(mesh, 3)
+        )
+    if cfg.frontend == "vision_patches":
+        batch_specs["patches"] = jax.ShapeDtypeStruct(
+            (gb, min(1024, sl), cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=SH.batch_sharding(mesh, 3),
+        )
+
+    def step_fn(params, batch):
+        M.set_activation_sharder(sharder)
+        params = fetch(params)
+        runs = [
+            M.Run(params=params["blocks"], n_repeats=M.num_repeats(cfg),
+                  act_policy="none", buffered=True,
+                  persistent=plan.chunk_placement(1) == "persist", gather_specs=gather)
+        ]
+        h, _ = M.forward(params, batch, cfg, runs=runs)
+        from repro.models.layers import apply_norm
+
+        h = apply_norm(params["final_norm"], h[:, -1:], cfg.norm)
+        w = params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]["w"]
+        return (h @ w)[:, 0]  # (B, V) next-token logits
+
+    return StepArtifacts(
+        fn=step_fn,
+        state_specs=SH.tree_specs(p_defs, p_shard),
+        batch_specs=batch_specs,
+        state_shardings=p_shard,
+        batch_shardings=None,
+        plan=plan,
+        runs=plan_runs(plan, M.num_repeats(cfg)),
+    )

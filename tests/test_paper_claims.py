@@ -1,0 +1,116 @@
+"""Assertions tying the reproduction to the paper's claims (EXPERIMENTS.md
+§Paper-claims): these run the planner under the paper's GPU testbeds and
+check the qualitative structure the paper reports."""
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.paper_models import PAPER_MODELS
+from repro.core import build_workload, estimate_memory, estimate_runtime, search
+from repro.core.baselines import BASELINES
+from repro.core.hardware import A100_80G, RTX_3090, MeshSpec
+
+GPU1 = MeshSpec((1,), ("data",))
+GPU4 = MeshSpec((4,), ("data",))
+
+
+def _throughput(cfg, batch, hw, planner):
+    shape = ShapeConfig("b", 1024, batch, "train")
+    w = build_workload(cfg, shape, GPU4, hw)
+    cap = hw.hbm_bytes * 0.92
+    if planner == "protrain":
+        res = search(w, capacity_bytes=cap)
+        return res.runtime.tokens_per_second if res.feasible else 0.0
+    plan = BASELINES[planner](w, cap)
+    if estimate_memory(w, plan).peak >= cap:
+        return 0.0
+    return estimate_runtime(w, plan).tokens_per_second
+
+
+def test_protrain_trains_larger_models_than_baselines_single_3090():
+    """Table 2: ProTrain > DeepSpeed/FSDP max size on one RTX 3090."""
+    from benchmarks.paper_tables import max_trainable_size
+
+    pro = max_trainable_size(RTX_3090, GPU1, "protrain")
+    ds = max_trainable_size(RTX_3090, GPU1, "deepspeed")
+    fsdp = max_trainable_size(RTX_3090, GPU1, "fsdp")
+    assert pro >= 20.0, f"ProTrain should train >=20B on 24GB+384GB host (got {pro})"
+    assert pro > 1.5 * ds, (pro, ds)
+    assert pro > fsdp
+
+
+def test_protrain_not_slower_than_baselines():
+    """Fig. 3: ProTrain throughput >= each baseline (same hardware/model)."""
+    for name in ("gpt2-10b", "llama-13b"):
+        cfg = PAPER_MODELS[name]
+        pro = max(_throughput(cfg, b, A100_80G, "protrain") for b in (8, 64))
+        for other in ("deepspeed", "colossalai", "fsdp"):
+            base = max(_throughput(cfg, b, A100_80G, other) for b in (8, 64))
+            assert pro >= base * 0.999, (name, other, pro, base)
+
+
+def test_table4_batch_size_shrinks_persistence():
+    """Table 4 rows A->B: larger batch forces fewer persistent chunks."""
+    cfg = PAPER_MODELS["gpt2-1b"]
+    hw = RTX_3090
+    plans = {}
+    for batch in (8, 64):
+        w = build_workload(cfg, ShapeConfig("b", 1024, batch, "train"), GPU4, hw)
+        plans[batch] = search(w).plan
+    assert plans[64].n_persist < plans[8].n_persist
+
+
+def test_table4_a100_avoids_memory_savings_for_small_model():
+    """Table 4 row C: 1B model at batch 64 on A100 needs no ckpt/offload."""
+    cfg = PAPER_MODELS["gpt2-1b"]
+    w = build_workload(cfg, ShapeConfig("b", 1024, 64, "train"), GPU4, A100_80G)
+    plan = search(w).plan
+    assert plan.n_checkpoint == 0 and plan.n_swap == 0 and plan.n_host == 0
+
+
+def test_table3_large_model_requires_offload():
+    """Table 3: GPT2-20B on 4xA100 is infeasible without offloading."""
+    cfg = PAPER_MODELS["gpt2-20b"]
+    w = build_workload(cfg, ShapeConfig("b", 1024, 8, "train"), GPU4, A100_80G)
+    no_off = search(w, allow_host=False)
+    with_off = search(w, allow_host=True)
+    assert not no_off.feasible
+    assert with_off.feasible
+
+
+def test_fig5_overlap_matters():
+    """Fig. 5: un-overlapping the host update costs >10% at batch >= 8."""
+    cfg = PAPER_MODELS["gpt2-10b"]
+    w = build_workload(cfg, ShapeConfig("b", 1024, 8, "train"), GPU4, RTX_3090)
+    res = search(w)
+    rt = res.runtime
+    t_no_overlap = rt.t_fwd + rt.t_bwd + rt.t_gpu_optim + rt.t_cpu_optim
+    if rt.t_cpu_optim > 0:
+        assert t_no_overlap > 1.1 * rt.t_iteration
+
+
+def test_memory_estimator_tracks_xla():
+    """Fig. 6 (bottom) analogue: predicted peak memory vs XLA buffer
+    assignment across plan variants — within 2x absolute and correctly
+    ordered (the search only needs ordering + a safety margin)."""
+    from benchmarks.estimator_fidelity import memory_fidelity
+
+    rows = {r["plan"]: r for r in memory_fidelity()}
+    for r in rows.values():
+        assert 0.5 <= r["ratio"] <= 2.0, r
+    # orderings the planner relies on
+    assert rows["ckpt_all"]["predicted_gb"] < rows["ckpt_half"]["predicted_gb"] < rows["resident"]["predicted_gb"]
+    assert rows["ckpt_all"]["xla_gb"] < rows["ckpt_half"]["xla_gb"] < rows["resident"]["xla_gb"]
+    assert rows["ubatch2"]["predicted_gb"] < rows["resident"]["predicted_gb"]
+    assert rows["ubatch2"]["xla_gb"] < rows["resident"]["xla_gb"]
+
+
+def test_runtime_estimator_absolute_sanity():
+    """Runtime estimator vs measured CPU wall time for the fully-resident
+    plan (the only contrast where a loaded 1-core container is a meaningful
+    oracle — recompute plans *speed up* on CPU via cache locality, see
+    EXPERIMENTS.md). Within 2x."""
+    from benchmarks.estimator_fidelity import runtime_fidelity
+
+    rows = {r["plan"]: r for r in runtime_fidelity(steps=2)}
+    r = rows["resident"]
+    assert 0.5 <= r["modeled_s"] / max(r["measured_s"], 1e-9) <= 2.0, r

@@ -1,0 +1,200 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, train loop,
+step builder integration (plan variants on a tiny model)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ShapeConfig
+from repro.core.plan import MemoryPlan
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.optim.adam import AdamConfig, adam_update, cosine_schedule, init_opt_state
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step_builder import build_train_step, plan_runs
+
+KEY = jax.random.PRNGKey(0)
+TINY = reduced(ARCHS["llama3-405b"])
+SHAPE = ShapeConfig("tiny", 64, 4, "train")
+
+
+def local_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adam_decreases_quadratic():
+    params = {"w": jnp.array([5.0, -3.0], jnp.float32)}
+    opt = init_opt_state(params)
+    cfg = AdamConfig(lr=0.1, grad_clip=100.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adam_update(params, grads, opt, cfg, cfg.lr)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adam_master_weights_preserve_precision():
+    """bf16 params + tiny updates: master fp32 must accumulate what bf16 cannot."""
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    opt = init_opt_state(params)
+    cfg = AdamConfig(lr=1e-5, grad_clip=1e9)
+    g = {"w": jnp.full((8,), 1e-3, jnp.bfloat16)}
+    for _ in range(10):
+        params, opt, _ = adam_update(params, g, opt, cfg, cfg.lr)
+    drift = np.asarray(opt["master"]["w"]) - 1.0
+    assert np.all(drift != 0.0)  # fp32 master moved even when bf16 rounds away
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < 1e-4
+
+
+def test_grad_clip():
+    from repro.optim.adam import clip_by_global_norm
+
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    total = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+    assert abs(float(total) - 1.0) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_pipeline_deterministic_and_resumable():
+    p1 = SyntheticTokenPipeline(TINY, SHAPE, seed=7)
+    b1 = [p1.next_sync() for _ in range(3)]
+    # resume from state after 1 batch
+    p2 = SyntheticTokenPipeline(TINY, SHAPE, seed=7)
+    p2.next_sync()
+    state = p2.state()
+    p3 = SyntheticTokenPipeline.from_state(TINY, SHAPE, state)
+    b3 = p3.next_sync()
+    np.testing.assert_array_equal(np.asarray(b1[1]["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_pipeline_prefetch_thread():
+    p = SyntheticTokenPipeline(TINY, SHAPE, seed=1, prefetch=2)
+    it = iter(p)
+    a = next(it)
+    b = next(it)
+    assert a["tokens"].shape == (SHAPE.global_batch, SHAPE.seq_len)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    p.stop()
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    p = SyntheticTokenPipeline(TINY, SHAPE, seed=3)
+    b = p.next_sync()
+    np.testing.assert_array_equal(
+        np.asarray(b["tokens"])[:, 1:], np.asarray(b["labels"])[:, :-1]
+    )
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"a": jnp.arange(10, dtype=jnp.float32), "nested": {"b": jnp.ones((3, 3))}}
+    mgr.save(5, state, extra={"data_step": 5}, sync=True)
+    specs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, extra = mgr.restore(5, specs)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(state["a"]))
+    assert extra["data_step"] == 5
+
+
+def test_checkpoint_atomicity_no_partial_reads(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    # a stale tmp dir (crashed save) must be invisible
+    os.makedirs(tmp_path / "step_9.tmp")
+    assert mgr.latest_step() is None
+    mgr.save(1, {"x": jnp.zeros(4)}, sync=True)
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.full(2, s)}, sync=True)
+    assert mgr.steps() == [3, 4]
+
+
+def test_checkpoint_elastic_restore_different_sharding(tmp_path):
+    """Save unsharded, restore onto an explicit 1x1 mesh sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    mgr.save(1, state, sync=True)
+    mesh = local_mesh()
+    spec = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32,
+                                      sharding=NamedSharding(mesh, P("data", None)))}
+    restored, _ = mgr.restore(1, spec)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+
+
+# ---------------------------------------------------------------------------
+# plan -> runs layout
+# ---------------------------------------------------------------------------
+def test_plan_runs_cover_all_repeats():
+    plan = MemoryPlan(n_chunks=12, n_blocks=10, n_persist=3, n_buffer=2,
+                      n_host=4, n_swap=2, n_checkpoint=5)
+    runs = plan_runs(plan, 10)
+    assert sum(r.length for r in runs) == 10
+    # persist chunks are at the front (chunks 1,2 -> repeats 0,1)
+    assert runs[0].placement == "persist"
+    # host chunks at the back
+    assert runs[-1].placement == "host"
+    # swap blocks first
+    assert runs[0].act_policy == "swap"
+
+
+def test_runs_merge_adjacent_same_policy():
+    plan = MemoryPlan(n_chunks=10, n_blocks=8, n_persist=0)
+    runs = plan_runs(plan, 8)
+    assert len(runs) == 1 and runs[0].length == 8
+
+
+# ---------------------------------------------------------------------------
+# end-to-end loop with fault tolerance
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_artifacts():
+    mesh = local_mesh()
+    plan = MemoryPlan(n_chunks=4, n_blocks=2, n_persist=4)
+    return build_train_step(TINY, plan, mesh, SHAPE, adam=AdamConfig(lr=3e-3))
+
+
+def test_train_loop_runs_and_learns(tiny_artifacts, tmp_path):
+    pipe = SyntheticTokenPipeline(TINY, SHAPE, seed=0)
+    mgr = CheckpointManager(str(tmp_path))
+    res = train_loop(tiny_artifacts, pipe, mgr,
+                     LoopConfig(total_steps=30, checkpoint_every=10, log_every=100))
+    assert res.steps_run == 30
+    assert np.mean(res.losses[-5:]) < np.mean(res.losses[:5])
+    assert mgr.latest_step() == 30
+
+
+def test_train_loop_resumes_from_checkpoint(tiny_artifacts, tmp_path):
+    pipe = SyntheticTokenPipeline(TINY, SHAPE, seed=0)
+    mgr = CheckpointManager(str(tmp_path))
+    train_loop(tiny_artifacts, pipe, mgr,
+               LoopConfig(total_steps=10, checkpoint_every=5, log_every=100))
+    # second run picks up at step 10 and continues to 15
+    pipe2 = SyntheticTokenPipeline(TINY, SHAPE, seed=0)
+    res2 = train_loop(tiny_artifacts, pipe2, mgr,
+                      LoopConfig(total_steps=15, checkpoint_every=5, log_every=100))
+    assert res2.resumed_from == 10
+    assert res2.steps_run == 5
+    assert pipe2.step >= 15  # data state restored, not restarted

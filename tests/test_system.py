@@ -1,0 +1,122 @@
+"""End-to-end behaviour tests for the system as a whole."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, shapes_for
+from repro.configs.base import TRAIN_4K, LONG_500K
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_cell_inventory_is_complete():
+    """10 archs; decode/prefill everywhere; long_500k only for sub-quadratic."""
+    assert len(ARCHS) == 10
+    total = 0
+    long_archs = []
+    for name, cfg in ARCHS.items():
+        shapes = {s.name for s in shapes_for(cfg)}
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= shapes
+        if "long_500k" in shapes:
+            long_archs.append(name)
+        total += len(shapes)
+    assert sorted(long_archs) == [
+        "jamba-1.5-large-398b", "mamba2-130m", "mixtral-8x22b",
+    ]
+    assert total == 33  # 66 dry-run cells over two meshes
+
+
+def test_dryrun_single_cell_subprocess():
+    """The dry-run harness works end to end (own process: it must own the
+    XLA device-count flag before jax initializes)."""
+    out = os.path.join(REPO, "reports", "test_dryrun")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "dryrun_cells.jsonl")
+    if os.path.exists(path):
+        os.remove(path)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-130m",
+         "--shape", "decode_32k", "--mesh", "single", "--out", out],
+        env=env, capture_output=True, text=True, timeout=480, cwd=REPO,
+    )
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    rec = json.loads(open(path).read().splitlines()[-1])
+    assert rec["ok"]
+    assert rec["roofline"]["t_memory_s"] > 0
+    assert rec["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_dryrun_sweep_artifacts_fresh_and_green():
+    """The committed sweep artifact covers all 66 cells with ok=True."""
+    path = os.path.join(REPO, "reports", "dryrun_cells.jsonl")
+    if not os.path.exists(path):
+        pytest.skip("sweep artifact not present (run repro.launch.dryrun --all)")
+    cells = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("ok"):
+            cells[(r["arch"], r["shape"], r["mesh"])] = r
+    assert len(cells) >= 66, len(cells)
+    for (arch, shape, mesh), r in cells.items():
+        assert r["roofline"]["flops_per_chip"] > 0, (arch, shape, mesh)
+
+
+def test_roofline_parser_on_real_compile():
+    """Trip-count-aware collective parsing against a known program."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.roofline import parse_collectives
+
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+
+    def f(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    comp = jax.jit(jax.grad(f)).lower(
+        jax.ShapeDtypeStruct((7, 16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((4, 16), jnp.float32),
+    ).compile()
+    ops = parse_collectives(comp.as_text())
+    # single device: no collectives, but the parser must not crash and the
+    # computation splitter must find the while bodies
+    from repro.launch.roofline import _split_computations, _trip_count
+
+    comps = _split_computations(comp.as_text())
+    assert any("while" in t for t in comps.values())
+    # trip count recovery: some condition computation holds constant(7)
+    tcs = [_trip_count(t) for n, t in comps.items() if "compare" in t.lower() or "lt" in t]
+    assert any(abs(t - 7.0) < 0.5 for t in tcs), tcs
+
+
+def test_shape_bytes_parser():
+    from repro.launch.roofline import _shape_bytes
+
+    assert _shape_bytes("f32[16384,53248]") == 16384 * 53248 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert _shape_bytes("pred[10]") == 10
+
+
+def test_train_cli_end_to_end(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "mamba2-130m",
+         "--reduced", "--steps", "6", "--batch", "2", "--seq", "64",
+         "--plan", "resident", "--ckpt-dir", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=480, cwd=REPO,
+    )
+    assert res.returncode == 0, res.stdout[-1500:] + res.stderr[-1500:]
+    summary = json.loads(res.stdout.strip().splitlines()[-1])
+    assert summary["steps"] == 6
+    assert np.isfinite(summary["final_loss"])
