@@ -1,0 +1,101 @@
+"""Version-compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the explicit-sharding era jax API:
+``jax.sharding.AxisType`` and ``jax.make_mesh(..., axis_types=...)``. Older
+jaxlib builds (<= 0.4.x) predate both. ``ensure_jax_compat()`` installs
+lightweight forwarders so every call site works unchanged on either version:
+
+  * ``jax.sharding.AxisType`` — a stand-in enum when missing (the values are
+    only ever passed back into ``make_mesh``, never inspected);
+  * ``jax.make_mesh`` — wrapped to accept-and-drop ``axis_types`` when the
+    underlying implementation does not know the kwarg (pre-explicit-sharding
+    meshes are Auto on every axis, which is exactly what the repo requests).
+
+Idempotent and cheap; called from ``repro.dist`` import and the test
+conftest so any entry point that builds a mesh is covered.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def ensure_jax_compat() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # follow_wrapped=False: functools.wraps sets __wrapped__, and a followed
+    # signature would never show the shim's added kwarg — breaking idempotency
+    sig = inspect.signature(jax.make_mesh, follow_wrapped=False)
+    if "axis_types" not in sig.parameters:
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+            del axis_types  # pre-explicit-sharding meshes are Auto everywhere
+            return orig(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+
+@functools.lru_cache(maxsize=None)
+def _barrier_is_differentiable() -> bool:
+    try:
+        jax.grad(lambda x: jax.lax.optimization_barrier((x,))[0])(1.0)
+        return True
+    except NotImplementedError:
+        return False
+
+
+@jax.custom_vjp
+def _barrier(tree):
+    return jax.lax.optimization_barrier(tree)
+
+
+def _barrier_fwd(tree):
+    return jax.lax.optimization_barrier(tree), None
+
+
+def _barrier_bwd(_, ct):
+    return (jax.lax.optimization_barrier(ct),)
+
+
+_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+def optimization_barrier(tree):
+    """``jax.lax.optimization_barrier`` that is differentiable everywhere.
+
+    Older jax releases ship the primitive without an AD rule; the barrier is
+    semantically an identity, so a custom-vjp wrapper (barrier on the
+    cotangents too, matching the newer built-in rule) restores gradients.
+    """
+    if _barrier_is_differentiable():
+        return jax.lax.optimization_barrier(tree)
+    return _barrier(tree)
+
+
+def host_memory_kind(mesh) -> str | None:
+    """The best host-side memory kind the mesh's devices support.
+
+    TPU/GPU expose ``pinned_host``; the CPU backend only ``unpinned_host``
+    (which still exercises every placement/fetch code path in tests). Returns
+    None when the platform has no addressable host memory space at all, in
+    which case host placement degrades to device residence.
+    """
+    try:
+        kinds = {m.kind for m in mesh.devices.flat[0].addressable_memories()}
+    except Exception:
+        return None
+    for kind in ("pinned_host", "unpinned_host"):
+        if kind in kinds:
+            return kind
+    return None

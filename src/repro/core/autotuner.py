@@ -80,6 +80,7 @@ def search(
     max_checkpoint_points: int = 9,
     sp: str = "off",  # "off" (paper-faithful) | "on" | "auto" (beyond-paper)
     dp: str = "off",  # "off" | "auto": also consider dp_only (model axis -> data)
+    compress: str = "off",  # "off" | "on" | "auto": int8+EF gradient-sync wire compression
 ) -> SearchResult:
     """Find the fastest plan fitting in per-chip memory."""
     t0 = time.time()
@@ -90,6 +91,7 @@ def search(
 
     sp_vals = {"off": (False,), "on": (True,), "auto": (False, True)}[sp]
     dp_vals = {"off": (False,), "on": (True,), "auto": (False, True)}[dp]
+    gc_vals = {"off": ("none",), "on": ("int8_ef",), "auto": ("none", "int8_ef")}[compress]
 
     def dp_view(wl: Workload) -> Workload:
         """Evaluate dp_only plans under a mesh where the model axis has been
@@ -111,7 +113,7 @@ def search(
         seqs = wl.seqs_per_device
         ubs = [m for m in microbatches if seqs / m >= 1 and (seqs / m) % 1 == 0] or [1]
         best, evaluated = _search_inner(
-            wl, capacity, ubs, sp_vals, use_dp, allow_host, allow_swap,
+            wl, capacity, ubs, sp_vals, gc_vals, use_dp, allow_host, allow_swap,
             max_checkpoint_points, best, evaluated,
         )
     w_final = w
@@ -129,10 +131,10 @@ def search(
     return best
 
 
-def _search_inner(w, capacity, ubs, sp_vals, use_dp, allow_host, allow_swap,
+def _search_inner(w, capacity, ubs, sp_vals, gc_vals, use_dp, allow_host, allow_swap,
                   max_checkpoint_points, best, evaluated):
     nc, nb = w.n_chunks, w.n_blocks
-    for ub, use_sp in itertools.product(ubs, sp_vals):
+    for ub, use_sp, gc in itertools.product(ubs, sp_vals, gc_vals):
         # n_swap feasible set (paper: bounded by N_interval & bandwidth)
         swap_vals = [0]
         if allow_swap:
@@ -140,7 +142,8 @@ def _search_inner(w, capacity, ubs, sp_vals, use_dp, allow_host, allow_swap,
                 if ns == 0:
                     continue
                 probe = MemoryPlan(nc, nb, n_swap=ns, microbatch=ub,
-                                   seq_shard_acts=use_sp, dp_only=use_dp)
+                                   seq_shard_acts=use_sp, dp_only=use_dp,
+                                   grad_compress=gc)
                 if estimate_runtime(w, probe).swap_feasible:
                     swap_vals.append(ns)
         for n_swap in swap_vals:
@@ -155,7 +158,7 @@ def _search_inner(w, capacity, ubs, sp_vals, use_dp, allow_host, allow_swap,
                         n_persist=n_persist, n_buffer=n_buffer, n_host=n_host,
                         n_swap=n_swap, n_checkpoint=n_ckpt, microbatch=ub,
                         seq_shard_acts=use_sp, dp_only=use_dp, ckpt_group=cg,
-                        host_params=hp,
+                        host_params=hp, grad_compress=gc,
                     )
 
                 # smallest-footprint config in this cell

@@ -28,6 +28,11 @@ from repro.core.profiler import BlockProfile, profile_superblock
 ADAM_FLOPS_PER_PARAM = 12.0  # fused Adam: ~12 flops/param (exp avgs + update)
 FP32 = 4
 
+# Wire-bytes multiplier for the gradient reduce under each compression mode
+# (repro.dist.collectives): bf16 matches the native grad dtype (no gain);
+# int8 halves the payload (per-tensor scale is negligible).
+GRAD_WIRE_FACTOR = {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5}
+
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
@@ -106,7 +111,7 @@ class Workload:
         """Gradient reduce (Eq. 6): all-reduce for persistent (replicated)
         chunks, reduce-scatter for sharded ones."""
         z = self.mesh.zero_degree
-        nbytes = chunk.grad_bytes / self.mesh.tp_degree
+        nbytes = chunk.grad_bytes * GRAD_WIRE_FACTOR[plan.grad_compress] / self.mesh.tp_degree
         bw = self.mesh.gather_bw(self.hw)
         if plan.chunk_placement(chunk.index) == "persist" and not plan.zero1_persistent:
             return 2.0 * nbytes * (z - 1) / z / bw
@@ -390,20 +395,26 @@ def estimate_memory(w: Workload, plan: MemoryPlan, ce_chunk: int = 2048) -> Memo
     tp, z = mesh.tp_degree, mesh.zero_degree
 
     # --- resident model states (Eq. 11's M_persist / M_buffer terms) -------
+    # int8_ef carries an fp32 error-feedback residual per param (2x the bf16
+    # grad bytes), sharded/placed exactly like the gradients it corrects.
+    ef = 2.0 if plan.grad_compress == "int8_ef" else 0.0
     states = 0.0
     gathered = 0.0
     for c in w.chunks:
         place = plan.chunk_placement(c.index)
-        full = (c.param_bytes + c.grad_bytes + c.optim_bytes) / tp
+        full = (c.param_bytes + c.grad_bytes * (1 + ef) + c.optim_bytes) / tp
         if place == "persist":
             if plan.zero1_persistent:
-                states += (c.param_bytes + c.grad_bytes) / tp + c.optim_bytes / (tp * z)
+                states += (c.param_bytes + c.grad_bytes * (1 + ef)) / tp + c.optim_bytes / (tp * z)
             else:
                 states += full
         elif place == "hbm":
             states += full / z
         elif place == "host" and not plan.host_params:
-            states += (c.param_bytes + c.grad_bytes) / (tp * z)  # ZeRO-Offload split
+            # ZeRO-Offload split (+ device-resident EF residual, if any)
+            states += (c.param_bytes + c.grad_bytes * (1 + ef)) / (tp * z)
+        elif place == "host":
+            states += ef * c.grad_bytes / (tp * z)  # EF residual stays on device
         if plan.chunk_buffered(c.index) and place != "persist":
             gathered += c.param_bytes / tp
     # host chunks: grads live on device only in a 2-chunk reduce->offload window

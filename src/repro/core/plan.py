@@ -64,6 +64,11 @@ class MemoryPlan:
     # split: bf16 param/grad shards stay in HBM (gathers ride ICI), only the
     # fp32 optimizer states live on host and round-trip once per step.
     host_params: bool = True
+    # beyond-paper: gradient-sync wire compression (repro.dist.collectives).
+    # "none" keeps XLA's native reduction; "bf16" forces a bf16 wire format;
+    # "int8_ef" quantizes to int8 with error-feedback residuals carried in the
+    # train state (fp32 per-param, accounted by the memory model).
+    grad_compress: str = "none"
 
     def __post_init__(self):
         assert 0 <= self.n_persist <= self.n_chunks
@@ -71,6 +76,7 @@ class MemoryPlan:
         assert 0 <= self.n_host <= self.n_chunks - self.n_persist
         assert 0 <= self.n_swap + self.n_checkpoint <= self.n_blocks
         assert self.microbatch >= 1
+        assert self.grad_compress in ("none", "bf16", "int8_ef"), self.grad_compress
 
     # ---- block policy ----------------------------------------------------
     def block_policy(self, b: int) -> str:
@@ -99,10 +105,11 @@ class MemoryPlan:
         return i >= self.n_chunks - self.n_buffer
 
     def describe(self) -> str:
+        comp = "" if self.grad_compress == "none" else f" comm={self.grad_compress}"
         return (
             f"persist={self.n_persist}/{self.n_chunks} buffer={self.n_buffer} "
             f"host={self.n_host} swap={self.n_swap} ckpt={self.n_checkpoint} "
-            f"ubatch={self.microbatch}"
+            f"ubatch={self.microbatch}{comp}"
         )
 
 

@@ -116,8 +116,13 @@ def _walk(jaxpr, *, weight_vars: set, mult: float, ops: list, resid: dict, depth
         elif prim == "while":
             inner = eqn.params["body_jaxpr"].jaxpr
             inner_mult = eqn.params.get("trip_count") or 1.0
-        elif prim in ("pjit", "closed_call", "custom_vjp_call_jaxpr", "remat"):
-            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")).jaxpr
+        elif prim in ("pjit", "closed_call", "custom_vjp_call_jaxpr",
+                      "custom_vjp_call", "remat"):
+            # the body's param key varies across jax versions:
+            # jaxpr (pjit/remat) | call_jaxpr (newer custom_vjp) | fun_jaxpr (older)
+            sub = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                   or eqn.params.get("fun_jaxpr"))
+            inner = getattr(sub, "jaxpr", sub)
         elif prim == "custom_jvp_call" and "call_jaxpr" in eqn.params:
             inner = eqn.params["call_jaxpr"].jaxpr
         elif prim == "cond":

@@ -119,6 +119,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, sp: str = "off",
         "alias_gb": mem.alias_size_in_bytes / 1e9,
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     if hlo_out:
         import zstandard

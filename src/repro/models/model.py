@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
+from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import mamba2 as M2
@@ -166,7 +167,7 @@ def gather_weights(params, specs=None):
     # it XLA commutes slice-of-stack with all-gather and hoists the gather of
     # the whole stacked run out of the loop — materializing every layer's
     # weights at once (the exact pattern chunk-wise gathering must avoid).
-    params = jax.lax.optimization_barrier(params)
+    params = optimization_barrier(params)
     return jax.tree.map(
         lambda w, s: checkpoint_name(w if s is None else jax.device_put(w, s), GATHERED_W),
         params,

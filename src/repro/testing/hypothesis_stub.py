@@ -1,0 +1,204 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` API the suite uses.
+
+The property suites (tests/test_core.py, tests/test_properties.py) depend on
+hypothesis, which is a declared test dependency (pyproject ``[test]``) but not
+part of the hermetic CI/container image. Rather than skip ~10 invariant tests
+when it is absent, ``install()`` registers this module as ``hypothesis`` in
+``sys.modules`` so the same test code runs against a small, seeded,
+reproducible random-example engine.
+
+Scope: exactly the surface the suite imports — ``given``, ``settings``,
+``assume`` and ``strategies.{integers, lists, sampled_from, text, floats,
+booleans, just, data}``. Draws are seeded per test name, so failures
+reproduce across runs; the first example of every integer strategy pins the
+lower bound and the second the upper, so boundary cases are always exercised.
+This is NOT a shrinking property-based engine; with real hypothesis installed
+it is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+__version__ = "0.stub"
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False); the example is silently discarded."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class SearchStrategy:
+    def __init__(self, draw, name="strategy"):
+        self._draw = draw
+        self._name = name
+
+    def example_from(self, rng: random.Random, index: int = 0):
+        return self._draw(rng, index)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng, i: f(self._draw(rng, i)), f"{self._name}.map")
+
+    def filter(self, pred):
+        def draw(rng, i):
+            for _ in range(100):
+                v = self._draw(rng, i)
+                if pred(v):
+                    return v
+                i = -1  # boundary example failed the predicate: go random
+            raise _Unsatisfied()
+
+        return SearchStrategy(draw, f"{self._name}.filter")
+
+    def __repr__(self):
+        return self._name
+
+
+class DataObject:
+    """The object ``st.data()`` hands to the test for interactive draws."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label=None):
+        return strategy.example_from(self._rng, -1)
+
+
+class _DataStrategy(SearchStrategy):
+    def __init__(self):
+        super().__init__(lambda rng, i: DataObject(rng), "data()")
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2**31) if min_value is None else min_value
+    hi = 2**31 if max_value is None else max_value
+
+    def draw(rng, i):
+        if i == 0:
+            return lo
+        if i == 1:
+            return hi
+        return rng.randint(lo, hi)
+
+    return SearchStrategy(draw, f"integers({lo}, {hi})")
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng, i: rng.uniform(min_value, max_value), "floats"
+    )
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng, i: rng.random() < 0.5, "booleans")
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng, i: value, f"just({value!r})")
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng, i: rng.choice(elements), "sampled_from")
+
+
+def lists(elements: SearchStrategy, min_size=0, max_size=None, **_kw) -> SearchStrategy:
+    hi = (min_size + 20) if max_size is None else max_size
+
+    def draw(rng, i):
+        n = min_size if i == 0 else rng.randint(min_size, hi)
+        return [elements.example_from(rng, -1) for _ in range(n)]
+
+    return SearchStrategy(draw, "lists")
+
+
+def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=None) -> SearchStrategy:
+    chars = list(alphabet) if not isinstance(alphabet, SearchStrategy) else None
+    hi = (min_size + 40) if max_size is None else max_size
+
+    def draw(rng, i):
+        n = min_size if i == 0 else rng.randint(min_size, hi)
+        if chars is None:
+            return "".join(alphabet.example_from(rng, -1) for _ in range(n))
+        return "".join(rng.choice(chars) for _ in range(n))
+
+    return SearchStrategy(draw, "text")
+
+
+def data() -> SearchStrategy:
+    return _DataStrategy()
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def deco(fn):
+        target = {"max_examples": max_examples or _DEFAULT_MAX_EXAMPLES}
+        fn._stub_settings = target
+        return fn
+
+    return deco
+
+
+def given(*pos_strategies, **kw_strategies):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        # positional strategies map to the test's trailing parameters,
+        # matching hypothesis' right-aligned convention
+        strat_map = dict(zip(names[len(names) - len(pos_strategies):], pos_strategies))
+        strat_map.update(kw_strategies)
+        fixture_params = [p for n, p in sig.parameters.items() if n not in strat_map]
+        seed0 = zlib.crc32(fn.__qualname__.encode())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_stub_settings", None) or getattr(
+                fn, "_stub_settings", {"max_examples": _DEFAULT_MAX_EXAMPLES}
+            )
+            for i in range(cfg["max_examples"]):
+                rng = random.Random((seed0 + i * 7919) & 0xFFFFFFFF)
+                try:
+                    drawn = {k: s.example_from(rng, i) for k, s in strat_map.items()}
+                    fn(*args, **{**kwargs, **drawn})
+                except _Unsatisfied:
+                    continue
+
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+def note(message):  # pragma: no cover - debugging aid only
+    print(message)
+
+
+def install() -> types.ModuleType:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    this = sys.modules[__name__]
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "sampled_from",
+                 "lists", "text", "data"):
+        setattr(strategies, name, getattr(this, name))
+    strategies.SearchStrategy = SearchStrategy
+    this.strategies = strategies
+    sys.modules["hypothesis"] = this
+    sys.modules["hypothesis.strategies"] = strategies
+    return this

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.pipeline import PipelineState, SyntheticTokenPipeline
+from repro.dist import collectives as COLL
 
 
 @dataclasses.dataclass
@@ -54,13 +55,34 @@ def train_loop(
     log: Callable[[str], None] = print,
 ) -> LoopResult:
     jfn = jax.jit(step_artifacts.fn, donate_argnums=(0,))
+    plan = getattr(step_artifacts, "plan", None)
+    grad_compress = getattr(plan, "grad_compress", "none") if plan is not None else "none"
+    if grad_compress != "none":
+        suffix = " (error feedback in state)" if grad_compress == "int8_ef" else ""
+        log(f"[loop] gradient sync compression: {grad_compress}{suffix}")
 
     # --- resume or init ------------------------------------------------------
     resumed_from = None
     start_step = 0
     state = None
     if ckpt is not None:
-        got = ckpt.restore_latest(step_artifacts.state_specs)
+        specs = step_artifacts.state_specs
+        try:
+            got = ckpt.restore_latest(specs)
+        except FileNotFoundError:
+            if "ef" not in specs:
+                raise
+            # checkpoint predates grad compression: restore without the EF
+            # residuals and cold-start them at their correct value, zero
+            got = ckpt.restore_latest({k: v for k, v in specs.items() if k != "ef"})
+            if got is not None:
+                s0, st, extra = got
+                st["ef"] = jax.tree.map(
+                    lambda z, s: jax.device_put(z, s.sharding),
+                    COLL.init_error_feedback(specs["ef"]), specs["ef"],
+                )
+                got = (s0, st, extra)
+                log("[loop] checkpoint has no EF residuals; starting them at zero")
         if got is not None:
             start_step, state, extra = got
             pipeline.step = int(extra.get("data_step", start_step))
@@ -111,7 +133,9 @@ def train_loop(
                     log(f"[loop] step {step}: straggler ({dt:.3f}s vs median {med:.3f}s)")
 
             if loop_cfg.log_every and step % loop_cfg.log_every == 0:
-                log(f"[loop] step {step} loss={loss:.4f} ({dt*1e3:.0f} ms)")
+                ef = metrics.get("ef_norm")
+                ef_s = f" ef_norm={float(ef):.3g}" if ef is not None else ""
+                log(f"[loop] step {step} loss={loss:.4f} ({dt*1e3:.0f} ms){ef_s}")
             step += 1
 
             if ckpt is not None and step % loop_cfg.checkpoint_every == 0:

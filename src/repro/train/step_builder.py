@@ -23,6 +23,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.plan import MemoryPlan
+from repro.dist import collectives as COLL
 from repro.dist import sharding as SH
 from repro.models import kvcache as KV
 from repro.models import model as M
@@ -349,6 +350,17 @@ def build_train_step(
     def pin_grads(grads):
         return jax.tree.map(jax.lax.with_sharding_constraint, grads, g_shard)
 
+    # --- plan-gated gradient-sync compression -------------------------------
+    # Under GSPMD the reduce implied by the shardings is XLA's; the gated path
+    # applies the compressed collective's wire numerics (int8 quantize +
+    # error feedback, see dist/collectives.py) to the reduced gradients, with
+    # the fp32 residual carried in the train state, sharded like the grads.
+    compress = plan.grad_compress
+    if compress == "int8_ef":
+        # o_defs_one is already the fp32 view of every param def
+        state_specs["ef"] = SH.tree_specs(o_defs_one, g_shard)
+        state_shardings["ef"] = g_shard
+
     def step_fn(state, batch):
         params = state["params"]
         mb = plan.microbatch
@@ -375,6 +387,15 @@ def build_train_step(
             total = total / mb
             ce = total
 
+        metrics = {}
+        if compress == "int8_ef":
+            grads, new_ef = COLL.compressed_tree_all_reduce(grads, state["ef"])
+            grads = pin_grads(grads)
+            new_ef = jax.tree.map(jax.lax.with_sharding_constraint, new_ef, g_shard)
+            metrics["ef_norm"] = OPT.global_norm(new_ef)
+        elif compress == "bf16":
+            grads = pin_grads(COLL.bf16_tree_all_reduce(grads))
+
         lr = lr_schedule(state["step"]) if lr_schedule else adam.lr
         new_params, new_opt, gnorm = OPT.adam_update(
             params, grads, state["opt"], adam, lr, host_plan=host_plan_flat
@@ -382,7 +403,9 @@ def build_train_step(
         # keep shardings/memory kinds pinned through the update
         new_params = jax.tree.map(jax.device_put, new_params, p_shard)
         new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
-        metrics = {"loss": total, "ce": ce, "grad_norm": gnorm, "lr": jnp.asarray(lr)}
+        if compress == "int8_ef":
+            new_state["ef"] = new_ef
+        metrics.update({"loss": total, "ce": ce, "grad_norm": gnorm, "lr": jnp.asarray(lr)})
         return new_state, metrics
 
     def init(key):
@@ -399,6 +422,10 @@ def build_train_step(
             "count": opt["count"],
         }
         state = {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+        if compress == "int8_ef":
+            state["ef"] = jax.tree.map(
+                jax.device_put, COLL.init_error_feedback(params), g_shard
+            )
         # identical constants (m/v zeros, step/count scalars) may share device
         # buffers, which breaks donation ("donate the same buffer twice")
         return jax.tree.map(lambda x: x.copy(), state)

@@ -31,6 +31,7 @@ def test_cell_inventory_is_complete():
     assert total == 33  # 66 dry-run cells over two meshes
 
 
+@pytest.mark.slow
 def test_dryrun_single_cell_subprocess():
     """The dry-run harness works end to end (own process: it must own the
     XLA device-count flag before jax initializes)."""
@@ -108,6 +109,7 @@ def test_shape_bytes_parser():
     assert _shape_bytes("pred[10]") == 10
 
 
+@pytest.mark.slow
 def test_train_cli_end_to_end(tmp_path):
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     res = subprocess.run(
