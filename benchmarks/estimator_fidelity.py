@@ -14,6 +14,7 @@ validated on what IS measurable here:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import jax
@@ -117,3 +118,34 @@ def runtime_fidelity(arch: str = "llama3-405b", steps: int = 3) -> list[dict]:
     rho = float(np.corrcoef(np.argsort(np.argsort(mod)), np.argsort(np.argsort(mea)))[0, 1])
     rows.append({"plan": "spearman_rank_corr", "modeled_s": round(rho, 3), "measured_s": ""})
     return rows
+
+
+def main() -> int:
+    """Emit the measured-vs-modeled drift report (CI uploads it per run)."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "reports")))
+    ap.add_argument("--skip-runtime", action="store_true",
+                    help="memory fidelity only (runtime rows execute real steps)")
+    args = ap.parse_args()
+
+    report = {"memory": memory_fidelity()}
+    if not args.skip_runtime:
+        report["runtime"] = runtime_fidelity()
+    os.makedirs(args.out, exist_ok=True)
+    out_path = os.path.join(args.out, "estimator_fidelity.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    for section, rows in report.items():
+        print(f"[fidelity] {section}:")
+        for r in rows:
+            print(f"  {r}")
+    print(f"[fidelity] wrote {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -83,6 +83,29 @@ def optimization_barrier(tree):
     return _barrier(tree)
 
 
+try:  # moved to jax.shard_map in newer releases
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = True):
+    """``shard_map`` across jax versions.
+
+    ``check`` maps to the replication-checker flag, which jax has renamed
+    (``check_rep`` -> ``check_vma``); callers that emit gather-based
+    all-reduces (dist/collectives.manual_*) pass False because the checker
+    cannot see that all_gather + identical local math yields replicated
+    outputs.
+    """
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=check)
+    except TypeError:  # pragma: no cover - newer jax renamed the flag
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_vma=check)
+
+
 def host_memory_kind(mesh) -> str | None:
     """The best host-side memory kind the mesh's devices support.
 

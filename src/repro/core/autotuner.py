@@ -17,6 +17,17 @@ n_host, microbatch). Pruning mirrors the paper:
 The search is exhaustive over the remaining axes. All evaluations are analytic
 (cost_model) — no training iterations are run, matching the paper's 0.06 s
 search overhead claim.
+
+Beyond-paper axes (docs/cost_model.md documents every knob and its units):
+
+  * ``compress`` — gradient-sync wire compression ("auto" by default now that
+    the wire factors are calibrated against measured dry-run bytes; see
+    benchmarks/calibrate_wire.py and cost_model.wire_factor);
+  * ``sync`` — who owns the gradient reduction: "xla" (GSPMD's reduce,
+    compression is numerics-only) or "manual" (shard_map sync with the
+    compressed payload on the wire). "manual" candidates are only emitted for
+    plans that satisfy ``MemoryPlan.manual_sync_ok`` (fully-replicated
+    layouts), because that is what the step builder can lower.
 """
 from __future__ import annotations
 
@@ -80,7 +91,11 @@ def search(
     max_checkpoint_points: int = 9,
     sp: str = "off",  # "off" (paper-faithful) | "on" | "auto" (beyond-paper)
     dp: str = "off",  # "off" | "auto": also consider dp_only (model axis -> data)
-    compress: str = "off",  # "off" | "on" | "auto": int8+EF gradient-sync wire compression
+    # int8+EF gradient-sync wire compression; "auto" by default — the wire
+    # factors are calibrated (cost_model.wire_factor), so weighing the knob
+    # costs nothing and the search is honest about when compression pays.
+    compress: str = "auto",  # "off" | "on" | "auto"
+    sync: str = "auto",  # "xla" | "manual" | "auto": who owns the grad reduce
 ) -> SearchResult:
     """Find the fastest plan fitting in per-chip memory."""
     t0 = time.time()
@@ -91,7 +106,20 @@ def search(
 
     sp_vals = {"off": (False,), "on": (True,), "auto": (False, True)}[sp]
     dp_vals = {"off": (False,), "on": (True,), "auto": (False, True)}[dp]
-    gc_vals = {"off": ("none",), "on": ("int8_ef",), "auto": ("none", "int8_ef")}[compress]
+    gc_only = {"off": ("none",), "on": ("int8_ef",), "auto": ("none", "int8_ef")}[compress]
+    sync_only = {"xla": ("xla",), "manual": ("manual",), "auto": ("xla", "manual")}[sync]
+    # (grad_compress, sync_mode) combos: manual sync without compression has
+    # no upside over XLA's native reduce, so it is never proposed
+    gc_vals = tuple(
+        (gc, sm) for gc in gc_only for sm in sync_only
+        if not (gc == "none" and sm == "manual")
+    )
+    if not gc_vals:
+        raise ValueError(
+            f"search(compress={compress!r}, sync={sync!r}) leaves nothing to "
+            "search: manual sync exists to put compressed payloads on the "
+            "wire, so it requires compress != 'off'"
+        )
 
     def dp_view(wl: Workload) -> Workload:
         """Evaluate dp_only plans under a mesh where the model axis has been
@@ -134,16 +162,21 @@ def search(
 def _search_inner(w, capacity, ubs, sp_vals, gc_vals, use_dp, allow_host, allow_swap,
                   max_checkpoint_points, best, evaluated):
     nc, nb = w.n_chunks, w.n_blocks
-    for ub, use_sp, gc in itertools.product(ubs, sp_vals, gc_vals):
-        # n_swap feasible set (paper: bounded by N_interval & bandwidth)
+    tp = w.mesh.tp_degree
+    for ub, use_sp, (gc, sync) in itertools.product(ubs, sp_vals, gc_vals):
+        manual = sync == "manual"
+        if manual and not (tp == 1 or use_dp):
+            continue  # manual sync needs replicated params (no TP)
+        # n_swap feasible set (paper: bounded by N_interval & bandwidth);
+        # manual sync excludes swap (manual_sync_ok)
         swap_vals = [0]
-        if allow_swap:
+        if allow_swap and not manual:
             for ns in _grid(nb, 5):
                 if ns == 0:
                     continue
                 probe = MemoryPlan(nc, nb, n_swap=ns, microbatch=ub,
                                    seq_shard_acts=use_sp, dp_only=use_dp,
-                                   grad_compress=gc)
+                                   grad_compress=gc, sync_mode=sync)
                 if estimate_runtime(w, probe).swap_feasible:
                     swap_vals.append(ns)
         for n_swap in swap_vals:
@@ -158,8 +191,24 @@ def _search_inner(w, capacity, ubs, sp_vals, gc_vals, use_dp, allow_host, allow_
                         n_persist=n_persist, n_buffer=n_buffer, n_host=n_host,
                         n_swap=n_swap, n_checkpoint=n_ckpt, microbatch=ub,
                         seq_shard_acts=use_sp, dp_only=use_dp, ckpt_group=cg,
-                        host_params=hp, grad_compress=gc,
+                        host_params=hp, grad_compress=gc, sync_mode=sync,
                     )
+
+                if manual:
+                    # manual sync only lowers for fully-persistent layouts:
+                    # the cell is the all-persist plan or nothing (and
+                    # host_params is moot with zero host chunks)
+                    if not hp:
+                        continue
+                    plan = mk(n_persist=nc)
+                    if not plan.manual_sync_ok(tp) or not _fits(w, plan, capacity):
+                        continue
+                    rt = estimate_runtime(w, plan)
+                    mem = estimate_memory(w, plan)
+                    cand = SearchResult(plan, rt, mem, evaluated, 0.0, True)
+                    if best is None or rt.t_iteration < best.runtime.t_iteration:
+                        best = cand
+                    continue
 
                 # smallest-footprint config in this cell
                 if not _fits(w, mk(), capacity):

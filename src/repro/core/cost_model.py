@@ -12,10 +12,23 @@ activation swapping and parameter uploads (§3.3's "compound effects").
 Memory (Eq. 8-11): block-granular replay of the FWD/BWD trajectory (the
 paper's operator-wise iteration, at the granularity our planner acts on),
 producing M_peak per device plus the trajectory for inspection (Fig. 2).
+
+Gradient-sync wire costs are *calibrated*, not assumed: the per-(sync_mode,
+grad_compress) wire factors default to the analytic table below, but a
+calibration JSON produced by ``benchmarks/calibrate_wire.py`` — which fits
+the factors against collective bytes measured from compiled dry-run HLO per
+backend — overrides them (``load_wire_calibration`` / auto-load from the
+packaged ``wire_calibration.json`` or ``$REPRO_WIRE_CALIBRATION``). The key
+calibrated fact: under ``sync_mode="xla"`` compression is numerics-only (XLA
+reduces the raw grads first; factor ~1.0), while ``sync_mode="manual"`` puts
+the int8 payload on the wire but pays a gather-based all-reduce. Every term
+and unit is documented in docs/cost_model.md; keep them in sync.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 import jax
 
@@ -28,10 +41,98 @@ from repro.core.profiler import BlockProfile, profile_superblock
 ADAM_FLOPS_PER_PARAM = 12.0  # fused Adam: ~12 flops/param (exp avgs + update)
 FP32 = 4
 
-# Wire-bytes multiplier for the gradient reduce under each compression mode
-# (repro.dist.collectives): bf16 matches the native grad dtype (no gain);
-# int8 halves the payload (per-tensor scale is negligible).
+# Uncalibrated default wire-bytes multiplier for the gradient reduce under
+# each compression mode, for the legacy in-jit ("xla") sync path. Kept for
+# backward compatibility and as the fallback when no calibration JSON has
+# been loaded — but note it encodes the *optimistic fiction* that in-jit
+# compression halves wire bytes; measurement says it does not (the reduce XLA
+# inserts moves the raw grads). Prefer wire_factor(), which consults the
+# calibration produced by benchmarks/calibrate_wire.py.
 GRAD_WIRE_FACTOR = {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5}
+
+# Analytic defaults per (sync_mode, grad_compress), used until a calibration
+# JSON overrides them. The xla column is 1.0 across the board — GSPMD reduces
+# the raw gradients before the compression numerics run, a structural fact
+# independent of backend — so a missing calibration file never re-introduces
+# the 0.5 fiction into the search. "manual" factors are payload-size ratios
+# vs the bf16 grads the uncompressed reduce moves; the gather-based topology
+# cost of the manual path is modeled separately in t_reduce.
+DEFAULT_WIRE_FACTORS = {
+    "xla": {"none": 1.0, "bf16": 1.0, "int8_ef": 1.0},
+    "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5},
+}
+
+# fp32 error-feedback residual per param = 2x the bf16 grad bytes; the
+# calibration JSON can override with the measured state-size delta.
+DEFAULT_EF_RESIDUAL_FACTOR = 2.0
+
+_CALIBRATION: dict | None = None
+_CALIBRATION_LOADED = False
+
+
+def load_wire_calibration(path: str | None = None) -> dict | None:
+    """Load (and activate) a wire-cost calibration JSON.
+
+    Schema (written by benchmarks/calibrate_wire.py):
+      {"backends": {"<backend>": {"wire_factors": {"xla": {...}, "manual":
+      {...}}, "ef_residual_factor": float, ...}}}
+    With ``path=None`` resolves ``$REPRO_WIRE_CALIBRATION``, then the packaged
+    ``src/repro/core/wire_calibration.json``. Returns the active per-backend
+    entry (matched against ``jax.default_backend()``, falling back to the
+    first entry) or None when no file exists.
+    """
+    global _CALIBRATION, _CALIBRATION_LOADED
+    _CALIBRATION_LOADED = True
+    if path is None:
+        path = os.environ.get("REPRO_WIRE_CALIBRATION") or os.path.join(
+            os.path.dirname(__file__), "wire_calibration.json")
+    if not os.path.exists(path):
+        _CALIBRATION = None
+        return None
+    with open(path) as f:
+        data = json.load(f)
+    backends = data.get("backends", {})
+    try:
+        backend = jax.default_backend()
+    except Exception:  # pragma: no cover - backend init can fail headless
+        backend = None
+    entry = backends.get(backend) or (next(iter(backends.values())) if backends else None)
+    _CALIBRATION = entry
+    return entry
+
+
+def reset_wire_calibration() -> None:
+    """Drop any loaded calibration (tests); next wire_factor() reloads."""
+    global _CALIBRATION, _CALIBRATION_LOADED
+    _CALIBRATION = None
+    _CALIBRATION_LOADED = False
+
+
+def _calibration() -> dict | None:
+    if not _CALIBRATION_LOADED:
+        load_wire_calibration()
+    return _CALIBRATION
+
+
+def wire_factor(sync_mode: str, compress: str) -> float:
+    """Wire-bytes multiplier for the gradient reduce: calibrated when a
+    calibration JSON is present, analytic default otherwise."""
+    cal = _calibration()
+    if cal is not None:
+        try:
+            return float(cal["wire_factors"][sync_mode][compress])
+        except KeyError:
+            pass
+    return DEFAULT_WIRE_FACTORS[sync_mode][compress]
+
+
+def ef_residual_factor() -> float:
+    """EF residual bytes per grad byte (fp32 residual / bf16 grad = 2.0),
+    calibrated against the measured train-state size delta when available."""
+    cal = _calibration()
+    if cal is not None and "ef_residual_factor" in cal:
+        return float(cal["ef_residual_factor"])
+    return DEFAULT_EF_RESIDUAL_FACTOR
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,10 +210,23 @@ class Workload:
 
     def t_reduce(self, chunk: ChunkInfo, plan: MemoryPlan) -> float:
         """Gradient reduce (Eq. 6): all-reduce for persistent (replicated)
-        chunks, reduce-scatter for sharded ones."""
+        chunks, reduce-scatter for sharded ones. The wire-bytes multiplier is
+        the *calibrated* factor for (sync_mode, grad_compress) — see
+        wire_factor() and docs/cost_model.md.
+
+        sync_mode="manual" + int8_ef is a gather-based all-reduce of the
+        replicated compressed payload (dist/collectives.manual_int8_ef_sync):
+        each chip receives (z-1) full payloads, vs the ring all-reduce's
+        2(z-1)/z passes — cheaper only while the compression ratio beats z/2,
+        which is exactly the trade the autotuner weighs. Manual bf16/none use
+        a psum (ring) like the xla path.
+        """
         z = self.mesh.zero_degree
-        nbytes = chunk.grad_bytes * GRAD_WIRE_FACTOR[plan.grad_compress] / self.mesh.tp_degree
+        factor = wire_factor(plan.sync_mode, plan.grad_compress)
+        nbytes = chunk.grad_bytes * factor / self.mesh.tp_degree
         bw = self.mesh.gather_bw(self.hw)
+        if plan.sync_mode == "manual" and plan.grad_compress == "int8_ef":
+            return nbytes * (z - 1) / bw
         if plan.chunk_placement(chunk.index) == "persist" and not plan.zero1_persistent:
             return 2.0 * nbytes * (z - 1) / z / bw
         return nbytes * (z - 1) / z / bw
@@ -395,9 +509,10 @@ def estimate_memory(w: Workload, plan: MemoryPlan, ce_chunk: int = 2048) -> Memo
     tp, z = mesh.tp_degree, mesh.zero_degree
 
     # --- resident model states (Eq. 11's M_persist / M_buffer terms) -------
-    # int8_ef carries an fp32 error-feedback residual per param (2x the bf16
-    # grad bytes), sharded/placed exactly like the gradients it corrects.
-    ef = 2.0 if plan.grad_compress == "int8_ef" else 0.0
+    # int8_ef carries an fp32 error-feedback residual per param (calibrated
+    # factor, default 2x the bf16 grad bytes), sharded/placed exactly like
+    # the gradients it corrects.
+    ef = ef_residual_factor() if plan.grad_compress == "int8_ef" else 0.0
     states = 0.0
     gathered = 0.0
     for c in w.chunks:
@@ -459,6 +574,19 @@ def estimate_memory(w: Workload, plan: MemoryPlan, ce_chunk: int = 2048) -> Memo
         logits = max(scale, 1.0) * cfg.vocab_size / tp * (2 + FP32)
 
     workspace = w.block.peak_transient_bytes * scale / tp / w.positions
+    if plan.sync_mode == "manual" and plan.grad_compress == "int8_ef":
+        # gather-based sync workspace: the largest gradient leaf is
+        # all-gathered as int8 (z x N x 1B) and dequantized to fp32
+        # (z x N x 4B) before the mean collapses it — both live at once at
+        # the end of each microbatch's backward. Leaf size is approximated by
+        # the largest single layer / non-block chunk (the embed table
+        # usually dominates).
+        leaf = max([w.max_position_param_bytes]
+                   + [c.param_bytes for c in w.chunks if not c.is_block])
+        import numpy as _np
+
+        elems = leaf / _np.dtype(cfg.dtype).itemsize
+        workspace = max(workspace, z * elems * 5.0)
     peak = max(max(traj) if traj else 0.0, states + gathered + workspace) + logits
     return MemoryBreakdown(
         model_states=states,

@@ -69,6 +69,16 @@ class MemoryPlan:
     # "int8_ef" quantizes to int8 with error-feedback residuals carried in the
     # train state (fp32 per-param, accounted by the memory model).
     grad_compress: str = "none"
+    # who owns the gradient reduction (see docs/architecture.md):
+    #   "xla"    — GSPMD inserts the reduce; grad_compress applies the wire
+    #              *numerics* to the already-reduced grads (wire bytes
+    #              unchanged — calibration measures factor ~1.0);
+    #   "manual" — the step builder wraps loss/grad in a shard_map over the
+    #              batch axes and owns the sync: local grads are quantized and
+    #              the compressed payload crosses the wire (real byte savings).
+    #              Requires a fully-replicated parameter layout; see
+    #              manual_sync_ok().
+    sync_mode: str = "xla"
 
     def __post_init__(self):
         assert 0 <= self.n_persist <= self.n_chunks
@@ -77,6 +87,36 @@ class MemoryPlan:
         assert 0 <= self.n_swap + self.n_checkpoint <= self.n_blocks
         assert self.microbatch >= 1
         assert self.grad_compress in ("none", "bf16", "int8_ef"), self.grad_compress
+        assert self.sync_mode in ("xla", "manual"), self.sync_mode
+
+    # ---- manual gradient sync eligibility ---------------------------------
+    def manual_sync_ok(self, tp_degree: int = 1) -> bool:
+        """Can this plan's grad sync run as a manual shard_map collective?
+
+        The manual path (train/step_builder.py) computes per-device gradients
+        under ``shard_map`` with *replicated* parameter specs and syncs them
+        with an explicit compressed collective over the batch axes. That is
+        DDP-style data parallelism, so it requires:
+
+          * every chunk persistent (replicated params — ZeRO-sharded or
+            host-resident shards would need a manual reduce-scatter + gather
+            pipeline that the in-jit GSPMD path already provides);
+          * fp32 optimizer states replicated too (no zero1_persistent);
+          * no tensor parallelism over the model axis (tp_degree == 1), unless
+            dp_only repurposes that axis as an extra batch axis;
+          * no activation swapping (host-offload remat policies reference
+            memory kinds that cannot be named inside a shard_map body).
+
+        Ineligible plans keep ``sync_mode="xla"`` semantics; the autotuner
+        only proposes "manual" for plans that pass this check.
+        """
+        return (
+            self.n_persist == self.n_chunks
+            and self.n_host == 0
+            and not self.zero1_persistent
+            and self.n_swap == 0
+            and (tp_degree == 1 or self.dp_only)
+        )
 
     # ---- block policy ----------------------------------------------------
     def block_policy(self, b: int) -> str:
@@ -106,6 +146,8 @@ class MemoryPlan:
 
     def describe(self) -> str:
         comp = "" if self.grad_compress == "none" else f" comm={self.grad_compress}"
+        if self.sync_mode != "xla":
+            comp += f" sync={self.sync_mode}"
         return (
             f"persist={self.n_persist}/{self.n_chunks} buffer={self.n_buffer} "
             f"host={self.n_host} swap={self.n_swap} ckpt={self.n_checkpoint} "

@@ -8,15 +8,31 @@ Two compression levels for the gradient all-reduce:
     and carries ``err' = (g + err) - dequantize(...)`` into the next step, so
     quantization error is fed back instead of lost (1-bit-Adam/PowerSGD-style
     EF; here at int8, the paper-adjacent "communication compression" knob the
-    autotuner can trade against plan runtime via cost_model.GRAD_WIRE_FACTOR).
+    autotuner trades against plan runtime via the calibrated wire factors in
+    ``core/cost_model.py``; see docs/cost_model.md).
 
-Single-controller note: under jit, XLA already inserts the reductions a
-sharding implies. Passing ``mesh=None`` (what train/step_builder.py does for
-the plan-gated path) applies the pure wire-format numerics to the
-already-reduced gradients — exactly what a compressed collective would have
-produced with synchronized replicas. Passing a mesh runs the actual
-``shard_map`` collective, guarded on mesh size so 1-device meshes (and the
-CPU test meshes) take the local math path.
+Two *sync paths* consume these numerics (``MemoryPlan.sync_mode``, dataflow
+diagram in docs/architecture.md):
+
+  * **xla** — under jit, GSPMD already inserts the reductions the shardings
+    imply. Passing ``mesh=None`` (what train/step_builder.py does for this
+    path) applies the pure wire-format numerics to the already-reduced
+    gradients — exactly what a compressed collective would have produced with
+    synchronized replicas, but the bytes XLA moves are the *uncompressed*
+    gradients (calibration measures wire factor ~1.0: numerics only).
+  * **manual** — the step builder runs loss/grad under ``shard_map`` and owns
+    the reduction via the ``manual_*`` functions below: each device quantizes
+    its local gradient (plus its error-feedback residual) to int8, the
+    *compressed* payload is all-gathered over the sync axes (int8 on the
+    wire — a gather-based all-reduce, the only reduction XLA lets us express
+    with an integer wire dtype without overflow), and every device
+    dequantizes and averages the shards locally. Real wire bytes drop by the
+    quantization ratio; each device carries its own residual.
+
+Everything outside a shard_map body is guarded on mesh size so 1-device
+meshes (and the CPU test meshes) take the local math path; the manual
+entry points are only ever called inside a shard_map body the step builder
+guards the same way.
 """
 from __future__ import annotations
 
@@ -26,10 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:  # moved to jax.shard_map in newer releases
-    from jax.experimental.shard_map import shard_map
-except ImportError:  # pragma: no cover
-    from jax import shard_map  # type: ignore[attr-defined]
+from repro.compat import shard_map
 
 
 def _mesh_size(mesh) -> int:
@@ -91,6 +104,58 @@ def compressed_all_reduce(
     else:
         avg = local
     return avg.astype(x.dtype), new_err.astype(err.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Manual sync primitives (called INSIDE a shard_map body; see step_builder)
+# ---------------------------------------------------------------------------
+def manual_mean(x: jax.Array, axis_names) -> jax.Array:
+    """Uncompressed mean over the sync axes (fp32 accumulate on the wire)."""
+    return jax.lax.pmean(x.astype(jnp.float32), axis_names).astype(x.dtype)
+
+
+def manual_bf16_mean(x: jax.Array, axis_names) -> jax.Array:
+    """Mean with bf16 on the wire: psum of the bf16-cast local value."""
+    return jax.lax.pmean(x.astype(jnp.bfloat16), axis_names).astype(x.dtype)
+
+
+def manual_int8_ef_sync(
+    x: jax.Array, err: jax.Array, axis_names
+) -> tuple[jax.Array, jax.Array]:
+    """Int8+EF mean over the sync axes with the compressed payload on the wire.
+
+    Gather-based all-reduce: quantize ``x + err`` locally, all-gather the int8
+    payload and fp32 scales (int8 is what actually crosses the link — psum of
+    int8 would overflow, so the sum happens after dequantization), then every
+    device dequantizes and averages identically, keeping the result exactly
+    replicated. ``err`` is per-device: each device feeds back what *its* wire
+    transmission dropped.
+    """
+    c = x.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = _quantize_int8(c)
+    new_err = c - _dequantize_int8(q, scale)
+    qg = jax.lax.all_gather(q, axis_names)  # (n, *x.shape) int8 on the wire
+    sg = jax.lax.all_gather(scale, axis_names)  # (n,) fp32 scales (negligible)
+    deq = qg.astype(jnp.float32) * sg.reshape((-1,) + (1,) * x.ndim)
+    return jnp.mean(deq, axis=0).astype(x.dtype), new_err.astype(err.dtype)
+
+
+def manual_tree_sync(grads, errs, axis_names, compress: str):
+    """Leaf-wise manual gradient sync for one microbatch's local grad tree.
+
+    Returns ``(synced_tree, new_err_tree)``; for the uncompressed modes the
+    error tree passes through unchanged (residuals stay zero).
+    """
+    if compress == "int8_ef":
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(errs)
+        outs = [manual_int8_ef_sync(g, e, axis_names) for g, e in zip(flat_g, flat_e)]
+        return (
+            treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]),
+        )
+    sync = manual_bf16_mean if compress == "bf16" else manual_mean
+    return jax.tree.map(lambda g: sync(g, axis_names), grads), errs
 
 
 # ---------------------------------------------------------------------------

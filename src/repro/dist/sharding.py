@@ -153,6 +153,34 @@ def tree_gather_shardings(
 
 
 # ---------------------------------------------------------------------------
+# Manual-sync shard_map specs (sync_mode="manual"; see train/step_builder.py)
+# ---------------------------------------------------------------------------
+def manual_sync_axes(mesh, dp_only: bool = False) -> tuple[str, ...]:
+    """Mesh axes the manual gradient sync reduces over: the batch axes
+    (== ZeRO axes; with dp_only the model axis joins them). The manual path
+    requires params replicated over exactly these axes (all-persist plans)."""
+    return batch_axes(mesh, dp_only)
+
+
+def manual_batch_pspec(rank: int, mesh, dp_only: bool = False) -> P:
+    """shard_map in_spec for a rank-``rank`` batch input: leading dim split
+    over the sync axes, the rest replicated — the PartitionSpec twin of
+    ``batch_sharding`` (which produces the jit-side NamedSharding)."""
+    return P(_entry(manual_sync_axes(mesh, dp_only)), *([None] * (rank - 1)))
+
+
+def manual_state_pspecs(tree):
+    """shard_map in/out specs for the train state under manual sync: every
+    leaf fully replicated (P()). Valid only for plans where
+    ``MemoryPlan.manual_sync_ok`` holds — all-persistent chunks with
+    replicated optimizer states — which the step builder enforces."""
+    return jax.tree.map(
+        lambda _: P(), tree,
+        is_leaf=lambda x: isinstance(x, (jax.Array, jax.ShapeDtypeStruct)),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Batch / activation shardings
 # ---------------------------------------------------------------------------
 def batch_sharding(mesh, rank: int, dp_only: bool = False) -> NamedSharding:

@@ -144,7 +144,7 @@ def parse_collectives(hlo: str) -> list[CollectiveOp]:
             nbytes = _shape_bytes(shape_str)
             if kind == "all-gather":
                 pass  # output shape == full gathered payload
-            dts = re.findall(r"(pred|bf16|f16|f32|s32|u32|f64)\[", shape_str)
+            dts = re.findall(r"(pred|s8|u8|bf16|f16|f32|s32|u32|f64)\[", shape_str)
             dtype = dts[0] if dts else "f32"
             gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
             if gm:

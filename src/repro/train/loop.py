@@ -59,7 +59,10 @@ def train_loop(
     grad_compress = getattr(plan, "grad_compress", "none") if plan is not None else "none"
     if grad_compress != "none":
         suffix = " (error feedback in state)" if grad_compress == "int8_ef" else ""
-        log(f"[loop] gradient sync compression: {grad_compress}{suffix}")
+        sync_mode = getattr(plan, "sync_mode", "xla")
+        wire = "compressed payload on the wire" if sync_mode == "manual" else "wire numerics only"
+        log(f"[loop] gradient sync: {sync_mode} ({wire}), "
+            f"compression: {grad_compress}{suffix}")
 
     # --- resume or init ------------------------------------------------------
     resumed_from = None

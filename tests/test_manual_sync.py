@@ -1,0 +1,245 @@
+"""Manual shard_map gradient sync (MemoryPlan.sync_mode="manual").
+
+Covers the ISSUE-2 acceptance criteria: numerics parity with the xla path on
+a multi-device mesh (CI forces 4 CPU devices), error-feedback residuals that
+carry across steps, the 1-device fallback guard, structural eligibility
+errors, the wire-cost calibration round trip, and the autotuner searching
+sync_mode with calibrated factors."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import cost_model as CM
+from repro.core.plan import MemoryPlan
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.optim.adam import AdamConfig
+from repro.train.step_builder import build_train_step
+
+N_DEV = len(jax.devices())
+TINY = reduced(ARCHS["llama3-405b"])
+SHAPE = ShapeConfig("tiny", 32, 16, "train")  # local batch 16/N_DEV per device
+
+needs_multi_device = pytest.mark.skipif(
+    N_DEV < 2 or 16 % N_DEV != 0,
+    reason="manual-vs-xla parity needs a multi-device mesh (CI forces 4)",
+)
+
+
+def dp_mesh(n=None):
+    n = n if n is not None else N_DEV
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def run_steps(plan, mesh, steps=10, lr=3e-3, seed=0):
+    art = build_train_step(TINY, plan, mesh, SHAPE, adam=AdamConfig(lr=lr))
+    state = art.init(jax.random.PRNGKey(seed))
+    jfn = jax.jit(art.fn, donate_argnums=(0,))
+    pipe = SyntheticTokenPipeline(TINY, SHAPE, seed=0)
+    losses, metrics = [], None
+    for _ in range(steps):
+        state, metrics = jfn(state, pipe.next_sync())
+        losses.append(float(metrics["loss"]))
+    return art, state, losses, metrics
+
+
+def persist_plan(**kw):
+    return MemoryPlan(n_chunks=4, n_blocks=2, n_persist=4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# numerics parity + EF carry-over
+# ---------------------------------------------------------------------------
+@needs_multi_device
+def test_manual_matches_xla_losses_over_ten_steps():
+    """Acceptance: int8+EF manual sync tracks the xla path within bf16
+    tolerance over >= 10 steps (the paths quantize before vs after the
+    reduce, so they are not bitwise equal — EF keeps them together)."""
+    mesh = dp_mesh()
+    _, _, l_xla, _ = run_steps(
+        persist_plan(grad_compress="int8_ef", sync_mode="xla"), mesh)
+    _, _, l_man, m_man = run_steps(
+        persist_plan(grad_compress="int8_ef", sync_mode="manual"), mesh)
+    assert all(np.isfinite(l_man))
+    # bf16 has ~8 mantissa bits: tolerate ~2 ulp of relative drift
+    np.testing.assert_allclose(l_man, l_xla, rtol=2e-2)
+    assert float(m_man["ef_norm"]) > 0
+
+
+@needs_multi_device
+def test_manual_int8_payload_is_on_the_wire():
+    """The compiled manual program must move s8 payloads (real compression),
+    and must contain no fp32 gradient all-reduce."""
+    mesh = dp_mesh()
+    art = build_train_step(
+        TINY, persist_plan(grad_compress="int8_ef", sync_mode="manual"), mesh, SHAPE)
+    hlo = art.lower(donate=False).compile().as_text()
+    s8_gathers = [ln for ln in hlo.splitlines() if "all-gather(" in ln and "s8[" in ln]
+    assert s8_gathers, "expected int8 all-gathers in the manual-sync HLO"
+
+
+@needs_multi_device
+def test_manual_ef_residual_carries_across_steps():
+    mesh = dp_mesh()
+    plan = persist_plan(grad_compress="int8_ef", sync_mode="manual")
+    art, state, _, _ = run_steps(plan, mesh, steps=1)
+    # manual EF is device-varying state, stored stacked (n_sync leading axis,
+    # sharded over the sync axes) so checkpoints see every device's residual
+    for leaf in jax.tree.leaves(state["ef"]):
+        assert leaf.shape[0] == N_DEV
+    ef1 = [np.asarray(x) for x in jax.tree.leaves(state["ef"])]
+    assert any(np.abs(e).max() > 0 for e in ef1)  # quantization dropped something
+    # the per-device slices genuinely differ (each fed back its own error)
+    assert any(
+        np.abs(e[0] - e[1]).max() > 0 for e in ef1 if e.shape[0] > 1
+    )
+
+    jfn = jax.jit(art.fn, donate_argnums=(0,))
+    pipe = SyntheticTokenPipeline(TINY, SHAPE, seed=1)
+    state2, _ = jfn(state, pipe.next_sync())
+    ef2 = [np.asarray(x) for x in jax.tree.leaves(state2["ef"])]
+    # the residual is live state: it keeps changing as new error feeds back
+    assert any(np.abs(a - b).max() > 0 for a, b in zip(ef1, ef2))
+
+
+@needs_multi_device
+def test_manual_microbatch_sync_per_microbatch():
+    mesh = dp_mesh()
+    plan = persist_plan(grad_compress="int8_ef", sync_mode="manual",
+                        microbatch=2)
+    _, state, losses, metrics = run_steps(plan, mesh, steps=3)
+    assert all(np.isfinite(losses))
+    assert float(metrics["ef_norm"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# guards
+# ---------------------------------------------------------------------------
+def test_manual_one_device_mesh_falls_back_to_local_math():
+    """Same guard policy as the mesh-size checks in dist/collectives.py: a
+    1-device mesh takes the local math path (wire numerics, no collectives)."""
+    mesh = dp_mesh(1)
+    plan = persist_plan(grad_compress="int8_ef", sync_mode="manual")
+    _, _, losses, metrics = run_steps(plan, mesh, steps=2)
+    assert all(np.isfinite(losses))
+    assert float(metrics["ef_norm"]) > 0
+
+
+def test_manual_rejects_non_replicated_layouts():
+    # eligibility is validated on every mesh size — including 1 device, so
+    # locally-exercised code fails the same way it would deployed
+    for n in {1, N_DEV}:
+        with pytest.raises(ValueError, match="manual"):
+            build_train_step(
+                TINY, MemoryPlan(n_chunks=4, n_blocks=2, grad_compress="int8_ef",
+                                 sync_mode="manual"),
+                dp_mesh(n), SHAPE)
+
+
+def test_search_rejects_manual_sync_without_compression():
+    from repro.core import TPU_V5E, build_workload, search
+    from repro.core.hardware import MeshSpec
+
+    w = build_workload(TINY, SHAPE, MeshSpec((4,), ("data",)), TPU_V5E)
+    with pytest.raises(ValueError, match="manual"):
+        search(w, compress="off", sync="manual")
+
+
+def test_manual_sync_ok_predicate():
+    ok = persist_plan(grad_compress="int8_ef", sync_mode="manual")
+    assert ok.manual_sync_ok(tp_degree=1)
+    assert not ok.manual_sync_ok(tp_degree=4)  # TP shards the params
+    assert persist_plan(dp_only=True).manual_sync_ok(tp_degree=4)
+    assert not MemoryPlan(4, 2).manual_sync_ok(1)  # ZeRO-sharded
+    assert not MemoryPlan(4, 2, n_persist=4, n_swap=1).manual_sync_ok(1)
+
+
+# ---------------------------------------------------------------------------
+# wire-cost calibration: fit -> JSON -> cost model
+# ---------------------------------------------------------------------------
+def test_calibration_roundtrip(tmp_path):
+    path = tmp_path / "wire_calibration.json"
+    doc = {
+        "generated_by": "test",
+        "backends": {
+            jax.default_backend(): {
+                "wire_factors": {
+                    "xla": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.9},
+                    "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.3},
+                },
+                "ef_residual_factor": 2.5,
+            }
+        },
+    }
+    path.write_text(json.dumps(doc))
+    try:
+        entry = CM.load_wire_calibration(str(path))
+        assert entry is not None
+        assert CM.wire_factor("xla", "int8_ef") == 0.9
+        assert CM.wire_factor("manual", "int8_ef") == 0.3
+        assert CM.ef_residual_factor() == 2.5
+    finally:
+        CM.reset_wire_calibration()
+
+
+def test_packaged_calibration_overrides_hardcoded_constant():
+    """Acceptance: the autotuner's wire costs come from the calibration JSON,
+    not the legacy GRAD_WIRE_FACTOR constant — the measured xla-path factor is
+    1.0 (in-jit compression never touched the wire), where the constant
+    claims 0.5."""
+    CM.reset_wire_calibration()
+    entry = CM.load_wire_calibration()
+    assert entry is not None, "packaged src/repro/core/wire_calibration.json missing"
+    assert CM.wire_factor("xla", "int8_ef") == 1.0
+    assert CM.wire_factor("xla", "int8_ef") != CM.GRAD_WIRE_FACTOR["int8_ef"]
+    assert CM.wire_factor("manual", "int8_ef") < 1.0  # real compression
+
+
+def test_t_reduce_uses_calibrated_factor(tmp_path):
+    from repro.core import TPU_V5E, build_workload
+    from repro.core.hardware import MeshSpec
+
+    w = build_workload(TINY, SHAPE, MeshSpec((4, 1), ("data", "model")), TPU_V5E)
+    chunk = w.chunks[1]
+    base = persist_plan(grad_compress="int8_ef", sync_mode="xla")
+
+    path = tmp_path / "cal.json"
+    for factor in (1.0, 0.5):
+        doc = {"backends": {jax.default_backend(): {
+            "wire_factors": {"xla": {"none": 1.0, "bf16": 1.0, "int8_ef": factor},
+                             "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5}}}}}
+        path.write_text(json.dumps(doc))
+        CM.load_wire_calibration(str(path))
+        if factor == 1.0:
+            t_full = w.t_reduce(chunk, base)
+        else:
+            t_half = w.t_reduce(chunk, base)
+    CM.reset_wire_calibration()
+    np.testing.assert_allclose(t_half, t_full * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# autotuner integration
+# ---------------------------------------------------------------------------
+def test_autotuner_searches_manual_sync_on_dp_mesh():
+    from repro.core import TPU_V5E, build_workload, search
+    from repro.core.hardware import MeshSpec
+
+    w = build_workload(TINY, SHAPE, MeshSpec((4,), ("data",)), TPU_V5E)
+    res = search(w, compress="on", sync="manual", allow_host=False, allow_swap=False)
+    assert res.feasible
+    assert res.plan.sync_mode == "manual"
+    assert res.plan.grad_compress == "int8_ef"
+    assert res.plan.manual_sync_ok(w.mesh.tp_degree)
+
+    # default search (compress="auto", sync="auto") must also succeed and only
+    # ever emit lowerable plans
+    res2 = search(w)
+    assert res2.feasible
+    if res2.plan.sync_mode == "manual":
+        assert res2.plan.manual_sync_ok(w.mesh.tp_degree)
