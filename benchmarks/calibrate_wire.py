@@ -24,14 +24,24 @@ GRAD_WIRE_FACTOR constant:
     all-gathers in the HLO), so the factor reflects the real quantization
     ratio.
 
+The manual *reduce-scatter* pipeline (ZeRO-sharded plans,
+``manual_sync_kind == "zero"``) is calibrated from a zero-persist plan: the
+s8 all_to_all bytes in its HLO over the modeled scatter-topology bytes at
+factor 1 become the ``int8_ef_rs`` factor. Only the s8 collectives count for
+that fit — the zero-manual program also carries the bf16 param all-gathers,
+which belong to t_gather, not t_reduce.
+
 The EF-residual memory term is calibrated the same run: the fp32 residual
 tree's bytes over the grad bytes, measured from the built train state specs.
 
 Usage:
-    PYTHONPATH=src python benchmarks/calibrate_wire.py [--out reports/] [--install]
+    PYTHONPATH=src python benchmarks/calibrate_wire.py [--out reports/]
+        [--install] [--dry-run]
 
 ``--install`` also writes src/repro/core/wire_calibration.json (the copy the
-cost model auto-loads, committed per backend).
+cost model auto-loads, committed per backend). ``--dry-run`` is the CI smoke
+mode: measure the two anchor configs (uncompressed xla + zero-manual int8),
+sanity-check the fitted factors, write nothing, exit non-zero on drift.
 """
 from __future__ import annotations
 
@@ -53,13 +63,16 @@ from repro.core.plan import MemoryPlan
 from repro.launch.roofline import parse_collectives
 from repro.train.step_builder import build_train_step
 
-CONFIGS = [  # (sync_mode, grad_compress)
-    ("xla", "none"),
-    ("xla", "bf16"),
-    ("xla", "int8_ef"),
-    ("manual", "bf16"),
-    ("manual", "int8_ef"),
+CONFIGS = [  # (key, sync_mode, grad_compress, n_persist of the 4-chunk plan)
+    ("xla/none", "xla", "none", 4),
+    ("xla/bf16", "xla", "bf16", 4),
+    ("xla/int8_ef", "xla", "int8_ef", 4),
+    ("manual/bf16", "manual", "bf16", 4),
+    ("manual/int8_ef", "manual", "int8_ef", 4),
+    # ZeRO-sharded manual: compressed reduce-scatter ("int8_ef_rs" factor)
+    ("manual_zero/int8_ef", "manual", "int8_ef", 0),
 ]
+DRY_RUN_KEYS = ("xla/none", "manual_zero/int8_ef")
 
 
 def _spec_bytes(tree) -> int:
@@ -70,23 +83,28 @@ def _spec_bytes(tree) -> int:
     )
 
 
-def _wire_bytes(hlo: str) -> tuple[float, float]:
-    """(raw, fp32-corrected) per-chip serialized collective bytes in the HLO.
+def _wire_bytes(hlo: str) -> tuple[float, float, float]:
+    """(raw, fp32-corrected, s8-only) per-chip serialized collective bytes.
 
     The corrected number halves fp32 payloads — the CPU backend upcasts bf16
     compute to fp32, dragging the gradient reduce with it; corrected
     approximates what a bf16-native backend moves (see launch/roofline.py).
+    The s8-only number isolates the compressed gradient payload — what the
+    reduce-scatter fit needs, because the zero-manual program also carries
+    bf16 param all-gathers that belong to t_gather, not t_reduce.
     """
     ops = parse_collectives(hlo)
     raw = sum(o.wire_bytes() * o.multiplier for o in ops)
     corrected = sum(
         o.wire_bytes() * o.multiplier * (0.5 if o.dtype == "f32" else 1.0) for o in ops
     )
-    return raw, corrected
+    s8 = sum(o.wire_bytes() * o.multiplier for o in ops if o.dtype in ("s8", "u8"))
+    return raw, corrected, s8
 
 
-def calibrate(steps_model: str = "llama3-405b") -> dict:
-    """Measure every (sync_mode, grad_compress) config; return the backend entry."""
+def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> dict:
+    """Measure every (sync_mode, grad_compress, layout) config; return the
+    backend entry. ``keys`` restricts to a subset (--dry-run smoke)."""
     cfg = reduced(ARCHS[steps_model])
     shape = ShapeConfig("calib", 32, 4, "train")
     n_dev = len(jax.devices())
@@ -97,45 +115,57 @@ def calibrate(steps_model: str = "llama3-405b") -> dict:
     chunks = chunk_inventory(cfg)
     grad_bytes = sum(c.grad_bytes for c in chunks)
 
-    def modeled_factor1(sync_mode: str, compress: str) -> float:
+    def modeled_factor1(key: str) -> float:
         """Per-chip wire bytes the cost model predicts at wire_factor == 1
         (mirror of cost_model.t_reduce's topology terms)."""
-        if sync_mode == "manual" and compress == "int8_ef":
+        if key == "manual_zero/int8_ef":
+            return grad_bytes * (z - 1) / z  # all_to_all reduce-scatter
+        if key == "manual/int8_ef":
             return grad_bytes * (z - 1)  # gather-based: z-1 payloads received
         return 2.0 * grad_bytes * (z - 1) / z  # ring all-reduce, replicated grads
 
     measured: dict[str, dict] = {}
-    base_plan = dict(n_chunks=4, n_blocks=2, n_persist=4)
     ef_factor = None
-    for sync_mode, compress in CONFIGS:
-        plan = MemoryPlan(**base_plan, grad_compress=compress, sync_mode=sync_mode)
+    for key, sync_mode, compress, n_persist in CONFIGS:
+        if keys is not None and key not in keys:
+            continue
+        plan = MemoryPlan(n_chunks=4, n_blocks=2, n_persist=n_persist,
+                          grad_compress=compress, sync_mode=sync_mode)
         art = build_train_step(cfg, plan, mesh, shape)
         compiled = art.lower(donate=False).compile()
-        raw, corrected = _wire_bytes(compiled.as_text())
-        measured[f"{sync_mode}/{compress}"] = {
+        raw, corrected, s8 = _wire_bytes(compiled.as_text())
+        measured[key] = {
             "wire_bytes_raw": raw,
             "wire_bytes_corrected": corrected,
-            "modeled_factor1_bytes": modeled_factor1(sync_mode, compress),
+            "wire_bytes_s8": s8,
+            "modeled_factor1_bytes": modeled_factor1(key),
         }
-        if compress == "int8_ef" and ef_factor is None:
+        if compress == "int8_ef" and n_persist == 4 and ef_factor is None:
             ef_factor = _spec_bytes(art.state_specs["ef"]) / grad_bytes
 
     # fit: xla factors are relative to the measured uncompressed reduce (same
     # collective inventory, so overheads cancel); manual factors against the
-    # model's own gather-topology prediction at factor 1
-    xla_base = max(measured["xla/none"]["wire_bytes_corrected"], 1.0)
-    factors = {"xla": {"none": 1.0}, "manual": {"none": 1.0}}
-    for sync_mode, compress in CONFIGS[1:]:
-        m = measured[f"{sync_mode}/{compress}"]["wire_bytes_corrected"]
+    # model's own topology prediction at factor 1 — the DDP gather fit uses
+    # all corrected collective bytes (its program has no other collectives),
+    # the zero reduce-scatter fit uses only the s8 bytes (its program also
+    # moves bf16 param gathers, which t_gather prices, not t_reduce)
+    factors: dict[str, dict] = {"xla": {"none": 1.0}, "manual": {"none": 1.0}}
+    xla_base = max(measured.get("xla/none", {}).get("wire_bytes_corrected", 0.0), 1.0)
+    for key, sync_mode, compress, _ in CONFIGS[1:]:
+        if key not in measured:
+            continue
+        m = measured[key]
         if sync_mode == "xla":
-            factors["xla"][compress] = round(m / xla_base, 4)
+            factors["xla"][compress] = round(m["wire_bytes_corrected"] / xla_base, 4)
+        elif key == "manual_zero/int8_ef":
+            factors["manual"]["int8_ef_rs"] = round(
+                m["wire_bytes_s8"] / m["modeled_factor1_bytes"], 4)
         else:
             factors["manual"][compress] = round(
-                m / measured[f"{sync_mode}/{compress}"]["modeled_factor1_bytes"], 4)
+                m["wire_bytes_corrected"] / m["modeled_factor1_bytes"], 4)
 
-    return {
+    entry = {
         "wire_factors": factors,
-        "ef_residual_factor": round(ef_factor, 4),
         "fit": {
             "model": steps_model,
             "mesh": list(mesh.devices.shape),
@@ -143,6 +173,9 @@ def calibrate(steps_model: str = "llama3-405b") -> dict:
             "measured": measured,
         },
     }
+    if ef_factor is not None:
+        entry["ef_residual_factor"] = round(ef_factor, 4)
+    return entry
 
 
 def main() -> int:
@@ -151,9 +184,30 @@ def main() -> int:
         os.path.join(os.path.dirname(__file__), "..", "reports")))
     ap.add_argument("--install", action="store_true",
                     help="also write src/repro/core/wire_calibration.json")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: measure the anchor configs, check the "
+                         "fitted factors are sane, write nothing")
     args = ap.parse_args()
 
     backend = jax.default_backend()
+    if args.dry_run:
+        entry = calibrate(keys=DRY_RUN_KEYS)
+        rs = entry["wire_factors"]["manual"].get("int8_ef_rs")
+        base = entry["fit"]["measured"]["xla/none"]["wire_bytes_corrected"]
+        print(f"[calibrate_wire --dry-run] backend={backend} "
+              f"xla/none corrected bytes={base:.0f} int8_ef_rs={rs}")
+        if base <= 0:
+            print("[calibrate_wire --dry-run] FAIL: no collective bytes "
+                  "measured for the uncompressed reduce")
+            return 1
+        if rs is None or not (0.1 <= rs <= 1.2):
+            print("[calibrate_wire --dry-run] FAIL: reduce-scatter factor "
+                  f"{rs} outside the sane band [0.1, 1.2] — the s8 payload "
+                  "is no longer (or no longer only) what crosses the wire")
+            return 1
+        print("[calibrate_wire --dry-run] OK")
+        return 0
+
     entry = calibrate()
     doc = {
         "generated_by": "benchmarks/calibrate_wire.py",

@@ -130,6 +130,10 @@ def main() -> int:
         os.path.join(os.path.dirname(__file__), "..", "reports")))
     ap.add_argument("--skip-runtime", action="store_true",
                     help="memory fidelity only (runtime rows execute real steps)")
+    ap.add_argument("--fail-threshold", type=float, default=None,
+                    help="fail (exit 1) when any memory prediction/measured "
+                         "ratio drifts outside [1/T, T] — the CI smoke gate "
+                         "that turns silent estimator rot into a red build")
     args = ap.parse_args()
 
     report = {"memory": memory_fidelity()}
@@ -144,6 +148,16 @@ def main() -> int:
         for r in rows:
             print(f"  {r}")
     print(f"[fidelity] wrote {out_path}")
+    if args.fail_threshold is not None:
+        t = args.fail_threshold
+        bad = [r for r in report["memory"]
+               if not (1.0 / t <= r["ratio"] <= t)]
+        if bad:
+            print(f"[fidelity] FAIL: {len(bad)} memory ratio(s) outside "
+                  f"[{1/t:.2f}, {t:.2f}]: "
+                  + ", ".join(f"{r['plan']}={r['ratio']}" for r in bad))
+            return 1
+        print(f"[fidelity] OK: all memory ratios within [{1/t:.2f}, {t:.2f}]")
     return 0
 
 

@@ -106,6 +106,33 @@ def shard_map(f, mesh, in_specs, out_specs, check: bool = True):
                           check_vma=check)
 
 
+@functools.lru_cache(maxsize=None)
+def pallas_supported() -> bool:
+    """Can this process run the Pallas kernels at all?
+
+    True when ``jax.experimental.pallas`` imports and either the backend
+    compiles Pallas natively (TPU/GPU) or interpret mode can execute the
+    kernel bodies op-by-op (the CPU fallback our tests use — bit-identical
+    math, no Mosaic). False on builds without Pallas, in which case the
+    ``repro.kernels`` package routes every request to the pure-jnp reference
+    implementations instead of crashing."""
+    try:
+        import jax.experimental.pallas as pl  # noqa: F401
+    except Exception:  # pragma: no cover - jaxlib built without pallas
+        return False
+    return True
+
+
+@functools.lru_cache(maxsize=None)
+def pallas_interpret_required() -> bool:
+    """True when Pallas must run in interpret mode (no kernel compiler for
+    this backend — i.e. anything but TPU/GPU)."""
+    try:
+        return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+    except Exception:  # pragma: no cover - backend init can fail headless
+        return True
+
+
 def host_memory_kind(mesh) -> str | None:
     """The best host-side memory kind the mesh's devices support.
 

@@ -25,9 +25,12 @@ Beyond-paper axes (docs/cost_model.md documents every knob and its units):
     benchmarks/calibrate_wire.py and cost_model.wire_factor);
   * ``sync`` — who owns the gradient reduction: "xla" (GSPMD's reduce,
     compression is numerics-only) or "manual" (shard_map sync with the
-    compressed payload on the wire). "manual" candidates are only emitted for
-    plans that satisfy ``MemoryPlan.manual_sync_ok`` (fully-replicated
-    layouts), because that is what the step builder can lower.
+    compressed payload on the wire: DDP-style compressed all-gather for
+    fully-replicated layouts, compressed reduce-scatter for ZeRO-sharded
+    ones). "manual" candidates are only emitted for plans with a non-None
+    ``MemoryPlan.manual_sync_kind`` — exactly what the step builder can
+    lower — which since the sync-strategy layer includes ZeRO-sharded plans
+    (no swap/host/TP), not just all-persist ones.
 """
 from __future__ import annotations
 
@@ -134,6 +137,7 @@ def search(
             new = MeshSpec((m.n_chips,), ("data",))
         return dataclasses.replace(wl, mesh=new)
 
+    real_tp = w.mesh.tp_degree  # pre-fold TP: manual eligibility needs it
     for use_dp in dp_vals:
         wl = dp_view(w) if use_dp else w
         if use_dp and w.shape.global_batch % wl.mesh.zero_degree != 0:
@@ -141,8 +145,8 @@ def search(
         seqs = wl.seqs_per_device
         ubs = [m for m in microbatches if seqs / m >= 1 and (seqs / m) % 1 == 0] or [1]
         best, evaluated = _search_inner(
-            wl, capacity, ubs, sp_vals, gc_vals, use_dp, allow_host, allow_swap,
-            max_checkpoint_points, best, evaluated,
+            wl, capacity, ubs, sp_vals, gc_vals, use_dp, real_tp, allow_host,
+            allow_swap, max_checkpoint_points, best, evaluated,
         )
     w_final = w
     if best is None:
@@ -159,16 +163,15 @@ def search(
     return best
 
 
-def _search_inner(w, capacity, ubs, sp_vals, gc_vals, use_dp, allow_host, allow_swap,
-                  max_checkpoint_points, best, evaluated):
+def _search_inner(w, capacity, ubs, sp_vals, gc_vals, use_dp, real_tp, allow_host,
+                  allow_swap, max_checkpoint_points, best, evaluated):
     nc, nb = w.n_chunks, w.n_blocks
-    tp = w.mesh.tp_degree
     for ub, use_sp, (gc, sync) in itertools.product(ubs, sp_vals, gc_vals):
         manual = sync == "manual"
-        if manual and not (tp == 1 or use_dp):
-            continue  # manual sync needs replicated params (no TP)
+        if manual and real_tp > 1 and not use_dp:
+            continue  # no manual kind lowers with a live TP axis (plan.py)
         # n_swap feasible set (paper: bounded by N_interval & bandwidth);
-        # manual sync excludes swap (manual_sync_ok)
+        # manual sync excludes swap (manual_sync_kind)
         swap_vals = [0]
         if allow_swap and not manual:
             for ns in _grid(nb, 5):
@@ -195,14 +198,25 @@ def _search_inner(w, capacity, ubs, sp_vals, gc_vals, use_dp, allow_host, allow_
                     )
 
                 if manual:
-                    # manual sync only lowers for fully-persistent layouts:
-                    # the cell is the all-persist plan or nothing (and
-                    # host_params is moot with zero host chunks)
+                    # manual sync lowers for no-swap/no-host layouts: the
+                    # "zero" kind covers ZeRO-sharded chunks via the
+                    # compressed reduce-scatter, "ddp" the all-persist plan
+                    # (host_params is moot with zero host chunks, buffering
+                    # is moot because the zero body gathers everything)
                     if not hp:
                         continue
-                    plan = mk(n_persist=nc)
-                    if not plan.manual_sync_ok(tp) or not _fits(w, plan, capacity):
+                    n_persist = _max_feasible(
+                        0, nc, lambda v: _fits(w, mk(n_persist=v), capacity))
+                    if n_persist < 0:
                         continue
+                    plan = mk(n_persist=n_persist)
+                    if plan.manual_sync_kind(real_tp) is None:
+                        # dp_only with a live TP axis only lowers DDP-style:
+                        # the all-persist plan is the one manual candidate
+                        plan = mk(n_persist=nc)
+                        if (plan.manual_sync_kind(real_tp) is None
+                                or not _fits(w, plan, capacity)):
+                            continue
                     rt = estimate_runtime(w, plan)
                     mem = estimate_memory(w, plan)
                     cand = SearchResult(plan, rt, mem, evaluated, 0.0, True)

@@ -118,14 +118,15 @@ def pack_into_chunks(param_sizes: list[int], chunk_size: int) -> list[list[int]]
 
 
 def chunk_waste(param_sizes: list[int], chunk_size: int) -> int:
-    """Total padding bytes when packing params into fixed-size chunks."""
+    """Total padding bytes when packing params into fixed-size chunks.
+
+    Oversized (dedicated) chunks are exact-fit: ``max(chunk_size, total)``
+    equals ``total`` whenever ``total >= chunk_size``, so they contribute
+    zero padding."""
     waste = 0
     for chunk in pack_into_chunks(param_sizes, chunk_size):
         total = sum(chunk)
-        padded = max(chunk_size, total)  # oversized chunks are exact-fit
-        if total >= chunk_size:
-            padded = total
-        waste += padded - total
+        waste += max(chunk_size, total) - total
     return waste
 
 

@@ -55,11 +55,15 @@ GRAD_WIRE_FACTOR = {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5}
 # the raw gradients before the compression numerics run, a structural fact
 # independent of backend — so a missing calibration file never re-introduces
 # the 0.5 fiction into the search. "manual" factors are payload-size ratios
-# vs the bf16 grads the uncompressed reduce moves; the gather-based topology
-# cost of the manual path is modeled separately in t_reduce.
+# vs the bf16 grads the uncompressed reduce moves; the topology cost of each
+# manual pipeline is modeled separately in t_reduce. "int8_ef_rs" is the
+# reduce-scatter pipeline for ZeRO-sharded chunks (manual_sync_kind="zero"):
+# same int8 payload ratio, but an all_to_all that moves (z-1)/z of the
+# compressed bytes instead of the gather's (z-1) — calibrated from the s8
+# collective bytes in the compiled HLO (benchmarks/calibrate_wire.py).
 DEFAULT_WIRE_FACTORS = {
     "xla": {"none": 1.0, "bf16": 1.0, "int8_ef": 1.0},
-    "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5},
+    "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5, "int8_ef_rs": 0.5},
 }
 
 # fp32 error-feedback residual per param = 2x the bf16 grad bytes; the
@@ -116,7 +120,11 @@ def _calibration() -> dict | None:
 
 def wire_factor(sync_mode: str, compress: str) -> float:
     """Wire-bytes multiplier for the gradient reduce: calibrated when a
-    calibration JSON is present, analytic default otherwise."""
+    calibration JSON is present, analytic default otherwise. ``compress``
+    accepts the pipeline-qualified key ``"int8_ef_rs"`` (manual
+    reduce-scatter for ZeRO-sharded chunks) in addition to the plain
+    grad_compress values; calibrations predating the key fall back to the
+    analytic default for it."""
     cal = _calibration()
     if cal is not None:
         try:
@@ -214,20 +222,36 @@ class Workload:
         the *calibrated* factor for (sync_mode, grad_compress) — see
         wire_factor() and docs/cost_model.md.
 
-        sync_mode="manual" + int8_ef is a gather-based all-reduce of the
-        replicated compressed payload (dist/collectives.manual_int8_ef_sync):
-        each chip receives (z-1) full payloads, vs the ring all-reduce's
-        2(z-1)/z passes — cheaper only while the compression ratio beats z/2,
-        which is exactly the trade the autotuner weighs. Manual bf16/none use
-        a psum (ring) like the xla path.
+        sync_mode="manual" + int8_ef has two topologies, per chunk placement
+        (dist/collectives.py):
+
+          * persistent (replicated) chunk — gather-based all-reduce of the
+            compressed payload (manual_int8_ef_sync): each chip receives
+            (z-1) full payloads, vs the ring all-reduce's 2(z-1)/z passes —
+            cheaper only while the compression ratio beats z/2;
+          * ZeRO-sharded chunk — compressed reduce-scatter
+            (manual_int8_ef_reduce_scatter): an all_to_all moving (z-1)/z of
+            the int8 bytes, i.e. the scatter topology at the compressed
+            payload size ("int8_ef_rs" factor) — roughly half the xla
+            reduce-scatter's bf16 bytes, and 1/z of the gather pipeline's.
+
+        Manual bf16/none use psum/psum_scatter (ring) like the xla path.
         """
         z = self.mesh.zero_degree
+        bw = self.mesh.gather_bw(self.hw)
+        sharded = (plan.chunk_placement(chunk.index) != "persist"
+                   or plan.zero1_persistent)
+        if plan.sync_mode == "manual" and plan.grad_compress == "int8_ef":
+            if sharded:
+                factor = wire_factor("manual", "int8_ef_rs")
+                nbytes = chunk.grad_bytes * factor / self.mesh.tp_degree
+                return nbytes * (z - 1) / z / bw
+            factor = wire_factor("manual", "int8_ef")
+            nbytes = chunk.grad_bytes * factor / self.mesh.tp_degree
+            return nbytes * (z - 1) / bw
         factor = wire_factor(plan.sync_mode, plan.grad_compress)
         nbytes = chunk.grad_bytes * factor / self.mesh.tp_degree
-        bw = self.mesh.gather_bw(self.hw)
-        if plan.sync_mode == "manual" and plan.grad_compress == "int8_ef":
-            return nbytes * (z - 1) / bw
-        if plan.chunk_placement(chunk.index) == "persist" and not plan.zero1_persistent:
+        if not sharded:
             return 2.0 * nbytes * (z - 1) / z / bw
         return nbytes * (z - 1) / z / bw
 
@@ -536,6 +560,18 @@ def estimate_memory(w: Workload, plan: MemoryPlan, ce_chunk: int = 2048) -> Memo
     host_blocks = [c for c in w.chunks if plan.chunk_placement(c.index) == "host"]
     if host_blocks:
         states += 2 * max(c.grad_bytes for c in host_blocks) / (tp * z)
+    manual_kind = (plan.manual_sync_kind(tp) if plan.sync_mode == "manual"
+                   else None)
+    if manual_kind == "zero":
+        # manual ZeRO gathers every non-persistent chunk's bf16 params up
+        # front and keeps them live for the whole step (ZeRO-2-style layout:
+        # full bf16 params, shard-resident fp32 states/grads); buffered
+        # chunks were already charged above
+        gathered += sum(
+            c.param_bytes for c in w.chunks
+            if plan.chunk_placement(c.index) != "persist"
+            and not plan.chunk_buffered(c.index)
+        ) / tp
     # two in-flight gather buffers (prefetch + execute), the paper's n_buffer>=2
     # floor. The gather unit is one *position* (layer): hybrids/MoE gather a
     # 44B-param superblock layer-by-layer, not all at once.
@@ -574,19 +610,33 @@ def estimate_memory(w: Workload, plan: MemoryPlan, ce_chunk: int = 2048) -> Memo
         logits = max(scale, 1.0) * cfg.vocab_size / tp * (2 + FP32)
 
     workspace = w.block.peak_transient_bytes * scale / tp / w.positions
-    if plan.sync_mode == "manual" and plan.grad_compress == "int8_ef":
-        # gather-based sync workspace: the largest gradient leaf is
-        # all-gathered as int8 (z x N x 1B) and dequantized to fp32
-        # (z x N x 4B) before the mean collapses it — both live at once at
-        # the end of each microbatch's backward. Leaf size is approximated by
-        # the largest single layer / non-block chunk (the embed table
-        # usually dominates).
+    if plan.sync_mode == "manual":
+        # Per-kind sync workspace. Leaf size is approximated by the largest
+        # single layer / non-block chunk (the embed table usually dominates).
         leaf = max([w.max_position_param_bytes]
                    + [c.param_bytes for c in w.chunks if not c.is_block])
         import numpy as _np
 
         elems = leaf / _np.dtype(cfg.dtype).itemsize
-        workspace = max(workspace, z * elems * 5.0)
+        if manual_kind == "zero":
+            # reduce-scatter workspace, any wire format: one microbatch's
+            # *full* local grad tree exists before the sync collapses it to
+            # shard size (the sharded chunks' persistent grads are only
+            # charged /z above). int8 additionally holds the all_to_all
+            # buffers of the largest leaf — int8 chunk payload (~1 B/elem) +
+            # the owner's fp32 dequantized shards (z shards of N/z elems at
+            # 4 B) ~ 5 B/elem.
+            grads_full = sum(
+                c.grad_bytes for c in w.chunks
+                if plan.chunk_placement(c.index) != "persist") / tp
+            extra = elems * 5.0 if plan.grad_compress == "int8_ef" else 0.0
+            workspace = max(workspace, grads_full + extra)
+        elif plan.grad_compress == "int8_ef":
+            # gather-based sync: the largest gradient leaf is all-gathered as
+            # int8 (z x N x 1B) and dequantized to fp32 (z x N x 4B) before
+            # the mean collapses it — both live at once at the end of each
+            # microbatch's backward.
+            workspace = max(workspace, z * elems * 5.0)
     peak = max(max(traj) if traj else 0.0, states + gathered + workspace) + logits
     return MemoryBreakdown(
         model_states=states,

@@ -75,9 +75,10 @@ class MemoryPlan:
     #              unchanged — calibration measures factor ~1.0);
     #   "manual" — the step builder wraps loss/grad in a shard_map over the
     #              batch axes and owns the sync: local grads are quantized and
-    #              the compressed payload crosses the wire (real byte savings).
-    #              Requires a fully-replicated parameter layout; see
-    #              manual_sync_ok().
+    #              the compressed payload crosses the wire (real byte
+    #              savings). Replicated layouts sync DDP-style (compressed
+    #              all-gather); ZeRO-sharded layouts reduce-scatter the
+    #              compressed payload to shard owners; see manual_sync_kind().
     sync_mode: str = "xla"
 
     def __post_init__(self):
@@ -90,33 +91,51 @@ class MemoryPlan:
         assert self.sync_mode in ("xla", "manual"), self.sync_mode
 
     # ---- manual gradient sync eligibility ---------------------------------
-    def manual_sync_ok(self, tp_degree: int = 1) -> bool:
-        """Can this plan's grad sync run as a manual shard_map collective?
+    def manual_sync_kind(self, tp_degree: int = 1) -> str | None:
+        """Which manual shard_map sync pipeline this plan lowers to, if any.
 
-        The manual path (train/step_builder.py) computes per-device gradients
-        under ``shard_map`` with *replicated* parameter specs and syncs them
-        with an explicit compressed collective over the batch axes. That is
-        DDP-style data parallelism, so it requires:
+        Returns:
+          * ``"ddp"``  — fully-replicated layout: the body computes per-device
+            gradients with replicated parameter specs and syncs them with a
+            compressed all-gather over the batch axes (DDP-style).
+          * ``"zero"`` — ZeRO-sharded layout (some chunks non-persistent): the
+            body gathers the bf16 param shards up front (ZeRO-2-style: full
+            bf16 params live for the step, fp32 optimizer states and the
+            synced gradient stay shard-resident), then reduce-scatters the
+            compressed local gradients so each device owns its shard's
+            reduced gradient and updates it in place.
+          * ``None``   — cannot lower manually; ``sync_mode="manual"`` raises.
 
-          * every chunk persistent (replicated params — ZeRO-sharded or
-            host-resident shards would need a manual reduce-scatter + gather
-            pipeline that the in-jit GSPMD path already provides);
-          * fp32 optimizer states replicated too (no zero1_persistent);
-          * no tensor parallelism over the model axis (tp_degree == 1), unless
-            dp_only repurposes that axis as an extra batch axis;
+        Shared requirements (both kinds):
+
           * no activation swapping (host-offload remat policies reference
-            memory kinds that cannot be named inside a shard_map body).
+            memory kinds that cannot be named inside a shard_map body);
+          * no host-resident chunks (same memory-kind constraint).
+
+        Kind-specific:
+
+          * "ddp" additionally needs replicated fp32 optimizer states (no
+            zero1_persistent) and tp_degree == 1 unless dp_only repurposes
+            the model axis as a batch axis;
+          * "zero" needs tp_degree == 1 outright (with a real model axis the
+            ZeRO shard axes and the batch/sync axes differ — dp_only shards
+            the batch over the model axis too, but parameters still shard
+            over the ZeRO axes only, so the reduce-scatter owner coordinate
+            would not match the storage layout) and no zero1_persistent
+            (persistent chunks keep replicated updates in the zero body).
 
         Ineligible plans keep ``sync_mode="xla"`` semantics; the autotuner
-        only proposes "manual" for plans that pass this check.
+        only proposes "manual" for plans with a non-None kind.
         """
-        return (
-            self.n_persist == self.n_chunks
-            and self.n_host == 0
-            and not self.zero1_persistent
-            and self.n_swap == 0
-            and (tp_degree == 1 or self.dp_only)
-        )
+        if self.n_swap > 0 or self.n_host > 0 or self.zero1_persistent:
+            return None
+        if self.n_persist == self.n_chunks:
+            return "ddp" if (tp_degree == 1 or self.dp_only) else None
+        return "zero" if tp_degree == 1 else None
+
+    def manual_sync_ok(self, tp_degree: int = 1) -> bool:
+        """True when the plan lowers manually at all (any kind)."""
+        return self.manual_sync_kind(tp_degree) is not None
 
     # ---- block policy ----------------------------------------------------
     def block_policy(self, b: int) -> str:

@@ -21,13 +21,28 @@ diagram in docs/architecture.md):
     synchronized replicas, but the bytes XLA moves are the *uncompressed*
     gradients (calibration measures wire factor ~1.0: numerics only).
   * **manual** — the step builder runs loss/grad under ``shard_map`` and owns
-    the reduction via the ``manual_*`` functions below: each device quantizes
-    its local gradient (plus its error-feedback residual) to int8, the
-    *compressed* payload is all-gathered over the sync axes (int8 on the
-    wire — a gather-based all-reduce, the only reduction XLA lets us express
-    with an integer wire dtype without overflow), and every device
-    dequantizes and averages the shards locally. Real wire bytes drop by the
-    quantization ratio; each device carries its own residual.
+    the reduction via the ``manual_*`` functions below. Two topologies:
+
+    - *replicated leaves* (DDP-style): each device quantizes its local
+      gradient (plus its error-feedback residual) to int8, the *compressed*
+      payload is all-gathered over the sync axes (int8 on the wire — a
+      gather-based all-reduce, the only all-reduce XLA lets us express with
+      an integer wire dtype without overflow), and every device dequantizes
+      and averages the shards locally.
+    - *ZeRO-sharded leaves* (``manual_*_reduce_scatter``): each device chunks
+      its local full gradient along the sharded dim, quantizes per chunk, and
+      an ``all_to_all`` delivers chunk *j*'s int8 payload (+ fp32 scale) to
+      shard-owner *j*, which dequantizes and averages — a compressed
+      reduce-scatter moving ``(z-1)/z`` of the int8 bytes per device, so each
+      device ends up owning its ZeRO shard's reduced gradient. The EF
+      residual is *shard*-sized: it feeds back the error of the chunk the
+      device contributes to its own shard (the 1/z of the quantization error
+      that re-enters this device's state; errors on chunks shipped to other
+      owners are plain round-to-nearest noise, bounded by half a
+      quantization step — see ``manual_int8_ef_reduce_scatter``).
+
+    Real wire bytes drop by the quantization ratio; each device carries its
+    own residual.
 
 Everything outside a shard_map body is guarded on mesh size so 1-device
 meshes (and the CPU test meshes) take the local math path; the manual
@@ -140,22 +155,111 @@ def manual_int8_ef_sync(
     return jnp.mean(deq, axis=0).astype(x.dtype), new_err.astype(err.dtype)
 
 
-def manual_tree_sync(grads, errs, axis_names, compress: str):
-    """Leaf-wise manual gradient sync for one microbatch's local grad tree.
+def _names(axis_names) -> tuple[str, ...]:
+    return (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
 
-    Returns ``(synced_tree, new_err_tree)``; for the uncompressed modes the
-    error tree passes through unchanged (residuals stay zero).
+
+def _sync_extent(axis_names) -> int:
+    """Extent of the (possibly compound) sync axis, inside a shard_map body.
+
+    ``psum`` of a Python constant folds to the static axis size."""
+    return int(jax.lax.psum(1, _names(axis_names)))
+
+
+def _flat_axis_index(axis_names) -> jax.Array:
+    """Row-major flattened device index over the sync axes — the shard-owner
+    coordinate, matching both PartitionSpec layout and the device order
+    jax.lax.all_to_all uses for a sequence of axis names."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in _names(axis_names):
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _pad_dim(x: jax.Array, dim: int, z: int) -> jax.Array:
+    """Zero-pad ``dim`` up to the next multiple of z (uneven-divisor leaves).
+
+    The state layout only ZeRO-shards evenly-divisible dims (dist/sharding
+    keeps the rest replicated), so in the train step this is a no-op; the
+    primitives still handle uneven dims so they compose as standalone
+    collectives — every owner then holds the *padded* shard and the caller
+    strips the tail."""
+    pad = (-x.shape[dim]) % z
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[dim] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _chunk(x: jax.Array, dim: int, z: int) -> jax.Array:
+    """(…, dim, …) -> (z, …, dim/z, …): shard chunks moved to a leading axis."""
+    x = _pad_dim(x, dim, z)
+    shard = x.shape[dim] // z
+    parts = x.reshape(x.shape[:dim] + (z, shard) + x.shape[dim + 1 :])
+    return jnp.moveaxis(parts, dim, 0)
+
+
+def manual_reduce_scatter(x: jax.Array, axis_names, dim: int,
+                          wire_dtype=None) -> jax.Array:
+    """Mean-reduce-scatter over the sync axes: returns this device's shard of
+    the mean gradient, shard dim ``dim`` (padded to a multiple of the sync
+    extent when uneven). ``wire_dtype`` casts the payload (bf16 wire format);
+    default keeps fp32 accumulation."""
+    z = _sync_extent(axis_names)
+    xw = _pad_dim(x.astype(wire_dtype or jnp.float32), dim, z)
+    out = jax.lax.psum_scatter(xw, _names(axis_names), scatter_dimension=dim,
+                               tiled=True)
+    return (out.astype(jnp.float32) / z).astype(x.dtype)
+
+
+def manual_bf16_reduce_scatter(x: jax.Array, axis_names, dim: int) -> jax.Array:
+    """Mean-reduce-scatter with bf16 on the wire."""
+    return manual_reduce_scatter(x, axis_names, dim, wire_dtype=jnp.bfloat16)
+
+
+def manual_int8_ef_reduce_scatter(
+    x: jax.Array, err: jax.Array, axis_names, dim: int
+) -> tuple[jax.Array, jax.Array]:
+    """Int8+EF mean-reduce-scatter with the compressed payload on the wire.
+
+    Each device splits its local full gradient into z shard-chunks along
+    ``dim``, adds its shard-sized error-feedback residual to the chunk headed
+    for *its own* shard, and quantizes each chunk with a per-chunk absmax
+    scale. An ``all_to_all`` then ships chunk j's int8 payload (+ fp32 scale)
+    to shard-owner j — int8 is what crosses the link; summing int8 would
+    overflow, so the sum happens owner-side after dequantization. The owner
+    dequantizes the z received chunks and averages: it now owns its ZeRO
+    shard's reduced gradient.
+
+    Returns ``(shard_mean, new_err)`` where both are shard-sized (``dim``
+    divided by the sync extent, zero-padded when uneven). The residual
+    carries exactly the error of this device's own-chunk transmission — the
+    component that feeds back into the shard this device owns and updates;
+    errors on the z-1 chunks shipped to other owners are not recoverable at
+    shard-sized state and stay plain rounding noise (bounded by half a
+    quantization step, i.e. |err| <= absmax/254 per element).
     """
-    if compress == "int8_ef":
-        flat_g, treedef = jax.tree.flatten(grads)
-        flat_e = treedef.flatten_up_to(errs)
-        outs = [manual_int8_ef_sync(g, e, axis_names) for g, e in zip(flat_g, flat_e)]
-        return (
-            treedef.unflatten([o[0] for o in outs]),
-            treedef.unflatten([o[1] for o in outs]),
-        )
-    sync = manual_bf16_mean if compress == "bf16" else manual_mean
-    return jax.tree.map(lambda g: sync(g, axis_names), grads), errs
+    z = _sync_extent(axis_names)
+    me = _flat_axis_index(axis_names)
+    ch = _chunk(x.astype(jnp.float32), dim, z)  # (z, *shard_shape)
+    ch = ch.at[me].add(err.astype(jnp.float32))
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(ch), axis=tuple(range(1, ch.ndim))), 1e-30) / 127.0
+    q = jnp.clip(
+        jnp.round(ch / scale.reshape((z,) + (1,) * (ch.ndim - 1))), -127, 127
+    ).astype(jnp.int8)
+    own_c = ch[me]
+    new_err = own_c - q[me].astype(jnp.float32) * scale[me]
+    qr = jax.lax.all_to_all(q, _names(axis_names), 0, 0)  # int8 on the wire
+    sr = jax.lax.all_to_all(scale, _names(axis_names), 0, 0)  # (z,) fp32 scales
+    deq = qr.astype(jnp.float32) * sr.reshape((z,) + (1,) * (qr.ndim - 1))
+    return jnp.mean(deq, axis=0).astype(x.dtype), new_err.astype(err.dtype)
+
+
+# Tree-level dispatch (replicated vs ZeRO-sharded leaves) lives in
+# train/sync.py (manual_tree_sync): the strategy layer owns which primitive
+# syncs which leaf; this module owns only the wire formats and topologies.
 
 
 # ---------------------------------------------------------------------------

@@ -169,13 +169,35 @@ def manual_batch_pspec(rank: int, mesh, dp_only: bool = False) -> P:
     return P(_entry(manual_sync_axes(mesh, dp_only)), *([None] * (rank - 1)))
 
 
+def leaf_sync_dim(sharding: NamedSharding, sync_axes: tuple[str, ...]) -> int | None:
+    """Dim index a leaf ZeRO-shards over *exactly* the manual sync axes.
+
+    Returns None for leaves the manual sync must treat as replicated — truly
+    replicated leaves (persistent chunks, norms/scalars) and leaves whose
+    tagged dim did not divide the axis extent (``_spec`` kept them whole).
+    The full-axes-match requirement is what makes the reduce-scatter's
+    shard-owner coordinate identical to the storage layout's."""
+    target = _entry(tuple(sync_axes))
+    for i, e in enumerate(sharding.spec):
+        if e == target or (isinstance(e, (tuple, list)) and tuple(e) == tuple(sync_axes)):
+            return i
+    return None
+
+
 def manual_state_pspecs(tree):
-    """shard_map in/out specs for the train state under manual sync: every
-    leaf fully replicated (P()). Valid only for plans where
-    ``MemoryPlan.manual_sync_ok`` holds — all-persistent chunks with
-    replicated optimizer states — which the step builder enforces."""
+    """shard_map in/out specs for the train state under manual sync: each
+    leaf's spec is its actual sharding (``P()`` for replicated leaves and
+    unsharded scalars). All-persistent (DDP-kind) plans yield replicated
+    specs everywhere; ZeRO-kind plans yield the sharded specs, so the body
+    sees true local shards. Host memory kinds never appear here — manual
+    eligibility (``MemoryPlan.manual_sync_kind``) excludes host chunks."""
+
+    def ps(leaf):
+        sh = getattr(leaf, "sharding", None)
+        return sh.spec if isinstance(sh, NamedSharding) else P()
+
     return jax.tree.map(
-        lambda _: P(), tree,
+        ps, tree,
         is_leaf=lambda x: isinstance(x, (jax.Array, jax.ShapeDtypeStruct)),
     )
 

@@ -1,3 +1,40 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Capability-gated kernel dispatch (ROADMAP: "wire the Pallas paths into
+the step builder behind a capability check").
+
+Consumers request fused ops from *this package* — never from ``ops.py``
+directly — so the request is always safe:
+
+  * ``repro.compat.pallas_supported()`` — Pallas imports and can execute
+    (compiled on TPU/GPU, interpret mode elsewhere; ``ops.py`` picks via
+    ``compat.pallas_interpret_required``): route to the Pallas wrappers;
+  * otherwise (jaxlib built without Pallas): route to the pure-jnp oracles
+    in ``ref.py``, which are the allclose targets the kernels are tested
+    against — same math, no crash.
+
+``optim/adam.py`` reaches its fused update through here, which is what lets
+``AdamConfig(use_fused_kernel=True)`` run on CPU CI (interpret mode) and on
+kernel-less builds (reference path) without special-casing the step builder.
+
+Only ``fused_adam_update`` is re-exported at package level: its name does
+not collide with a submodule. ``flash_attention`` / ``rmsnorm`` keep their
+submodule import paths (``repro.kernels.ops`` applies the same capability
+gating) — binding same-named functions on the package would shadow the
+``repro.kernels.flash_attention`` / ``repro.kernels.rmsnorm`` modules for
+``import … as`` style imports.
+"""
+from __future__ import annotations
+
+from repro.compat import pallas_supported
+
+if pallas_supported():
+    from repro.kernels.ops import fused_adam_update  # noqa: F401
+else:  # pragma: no cover - exercised only on pallas-less jaxlib builds
+
+    def fused_adam_update(p, g, master, m, v, *, lr, b1, b2, eps,
+                          weight_decay, bc1, bc2):
+        """Signature-compatible reference fallback (see optim/adam.py)."""
+        from repro.kernels.ref import fused_adam_ref
+
+        return fused_adam_ref(p, g, master, m, v, lr=lr, b1=b1, b2=b2,
+                              eps=eps, weight_decay=weight_decay,
+                              bc1=bc1, bc2=bc2)

@@ -7,22 +7,24 @@ without TPU hardware.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.compat import pallas_interpret_required
 from repro.kernels import fused_adam as _fa
 from repro.kernels import flash_attention as _flash
 from repro.kernels import rmsnorm as _rn
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _interpret() -> bool:
+    # capability probe lives in repro.compat; interpret mode covers every
+    # backend without a Pallas compiler (CPU CI included)
+    return pallas_interpret_required()
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
     return _flash.flash_attention(
         q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
-        interpret=not _on_tpu(),
+        interpret=_interpret(),
     )
 
 
@@ -34,8 +36,8 @@ def fused_adam_update(p, g, master, m, v, *, lr, b1, b2, eps, weight_decay, bc1,
         jnp.asarray(weight_decay, jnp.float32), jnp.asarray(bc1, jnp.float32),
         jnp.asarray(bc2, jnp.float32), jnp.zeros((), jnp.float32),
     ])
-    return _fa.fused_adam(p, g, master, m, v, scal, interpret=not _on_tpu())
+    return _fa.fused_adam(p, g, master, m, v, scal, interpret=_interpret())
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-6):
-    return _rn.rmsnorm(x, scale, eps=eps, interpret=not _on_tpu())
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=_interpret())

@@ -43,8 +43,11 @@ def global_norm(tree) -> jax.Array:
     return jnp.sqrt(sum(leaves))
 
 
-def clip_by_global_norm(grads, max_norm: float):
-    norm = global_norm(grads)
+def clip_by_global_norm(grads, max_norm: float, norm: jax.Array | None = None):
+    """``norm`` overrides the locally-computed global norm — the manual ZeRO
+    sync path holds shard-sized gradient leaves, so the true global norm
+    needs a cross-device reduction the caller owns (train/sync.py)."""
+    norm = global_norm(grads) if norm is None else norm
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
 
@@ -61,7 +64,10 @@ def _update_leaf(p, g, master, m, v, *, cfg: AdamConfig, lr, bc1, bc2, fused: bo
         m = jax.device_put(m, d_shard)
         v = jax.device_put(v, d_shard)
     if fused and host is None:
-        from repro.kernels.ops import fused_adam_update
+        # package-level dispatch: Pallas when the backend supports it (compat
+        # .pallas_supported), pure-jnp reference otherwise — requesting the
+        # fused kernel is always safe, never a crash on kernel-less backends
+        from repro.kernels import fused_adam_update
 
         return fused_adam_update(
             p, g, master, m, v, lr=lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
@@ -86,13 +92,14 @@ def _update_leaf(p, g, master, m, v, *, cfg: AdamConfig, lr, bc1, bc2, fused: bo
 
 
 def adam_update(params, grads, opt_state, cfg: AdamConfig, lr: float | jax.Array,
-                host_plan: list | None = None):
+                host_plan: list | None = None, grad_norm: jax.Array | None = None):
     """Returns (new_params, new_opt_state, grad_norm).
 
     ``host_plan``: optional flat list aligned with the flattened params; each
     entry is None or (param_sharding, opt_host_sharding, opt_device_sharding)
-    marking a host-offloaded leaf."""
-    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    marking a host-offloaded leaf. ``grad_norm``: externally-computed global
+    norm for clipping (manual ZeRO sync: leaves are device-local shards)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip, norm=grad_norm)
     count = opt_state["count"] + 1
     bc1 = 1 - cfg.b1 ** count.astype(jnp.float32)
     bc2 = 1 - cfg.b2 ** count.astype(jnp.float32)

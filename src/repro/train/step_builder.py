@@ -8,11 +8,13 @@ This is where ProTrain's plan becomes an XLA program:
   * n_swap/n_ckpt    -> per-position jax.checkpoint policies (offload/remat)
   * microbatch       -> gradient-accumulation scan
   * host_optimizer   -> optimizer states of host chunks live in pinned_host
-  * sync_mode        -> who owns the gradient reduction: "xla" (GSPMD inserts
-    it; grad_compress applies wire numerics to the reduced grads) or "manual"
-    (the whole step body runs under shard_map with explicit in/out specs from
-    dist/sharding.py and the compressed payload crosses the wire; see
-    docs/architecture.md for the dataflow and eligibility rules)
+  * sync_mode        -> who owns the gradient reduction; lowered through the
+    strategy objects in train/sync.py: "xla" (GSPMD inserts it; grad_compress
+    applies wire numerics to the reduced grads) or "manual" (the whole step
+    body runs under shard_map with in/out specs from dist/sharding.py and the
+    compressed payload crosses the wire — DDP-style gather sync for
+    replicated layouts, compressed reduce-scatter for ZeRO-sharded ones; see
+    docs/architecture.md for the dataflows and eligibility rules)
 
 The returned artifacts carry ShapeDtypeStruct specs for every input so the
 multi-pod dry-run can ``.lower().compile()`` without allocating anything.
@@ -20,22 +22,20 @@ multi-pod dry-run can ``.lower().compile()`` without allocating anything.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.plan import MemoryPlan
-from repro.dist import collectives as COLL
 from repro.dist import sharding as SH
 from repro.models import kvcache as KV
 from repro.models import model as M
 from repro.models.layers import ParamDef
 from repro.optim import adam as OPT
+from repro.train import sync as SYNC
 from repro.train.losses import chunked_cross_entropy
 
 
@@ -304,15 +304,18 @@ def build_train_step(
 
     sharder = SH.make_activation_sharder(mesh, plan)
 
-    def make_runs(params) -> list[M.Run]:
+    def make_runs(params, full: bool = False) -> list[M.Run]:
+        """``full=True`` (manual sync): params were gathered to full leaves
+        before the loss, so every run behaves persistent — no point-of-use
+        device_put gathers (they cannot appear inside a shard_map body)."""
         return [
             M.Run(
                 params=params["runs"][i],
                 n_repeats=r.length,
                 act_policy=r.act_policy,
-                buffered=r.buffered,
-                persistent=r.placement == "persist",
-                gather_specs=gather_specs[i],
+                buffered=True if full else r.buffered,
+                persistent=True if full else r.placement == "persist",
+                gather_specs=None if full else gather_specs[i],
                 ckpt_group=plan.ckpt_group,
             )
             for i, r in enumerate(runs_layout)
@@ -327,17 +330,20 @@ def build_train_step(
     else:
         w_acc_sharding = NamedSharding(mesh, P(None, tp_axis))
 
-    def make_loss_fn(act_sharder, w_acc):
+    def make_loss_fn(act_sharder, w_acc, full: bool = False):
         """Loss closure; the manual path re-instantiates it with an identity
-        activation sharder and no CE-accumulator constraint (NamedShardings
-        cannot name axes that are Manual inside a shard_map body)."""
+        activation sharder, no CE-accumulator constraint (NamedShardings
+        cannot name axes that are Manual inside a shard_map body), and
+        ``full=True``: params arrive pre-gathered to full leaves, so the
+        device_put-based fetch/gather machinery is bypassed entirely."""
 
         def loss_fn(params, batch):
             M.set_activation_sharder(act_sharder)
-            fparams = fetch(params)
+            fparams = params if full else fetch(params)
             h, aux = M.forward(
-                fparams, batch, cfg, runs=make_runs(params), attn_impl=attn_impl,
-                encoder_gather_specs=enc_gather,
+                fparams, batch, cfg, runs=make_runs(params, full=full),
+                attn_impl=attn_impl,
+                encoder_gather_specs=None if full else enc_gather,
             )
             from repro.models.layers import apply_norm
 
@@ -366,102 +372,32 @@ def build_train_step(
     def pin_grads(grads):
         return jax.tree.map(jax.lax.with_sharding_constraint, grads, g_shard)
 
-    # --- plan-gated gradient-sync compression -------------------------------
-    # sync_mode="xla": under GSPMD the reduce implied by the shardings is
-    # XLA's; the gated path applies the compressed collective's wire numerics
-    # (int8 quantize + error feedback, see dist/collectives.py) to the reduced
-    # gradients, with the fp32 residual carried in the train state, sharded
-    # like the grads. sync_mode="manual": the step body below runs under
-    # shard_map and the compressed payload itself crosses the wire.
-    #
-    # Structural eligibility is validated up front (even on 1-device meshes,
-    # so code first exercised locally fails the same way it would deployed);
-    # the 1-device *fallback* to the local-math xla step only applies to
-    # plans that could lower manually in the first place.
+    # --- gradient sync: strategy object owns the control flow ---------------
+    # train/sync.py picks the pipeline for (sync_mode, layout kind) — raising
+    # for structurally-ineligible manual plans even on 1-device meshes (so
+    # code first exercised locally fails the same way it would deployed) and
+    # falling back to the local-math xla strategy on one device. The EF
+    # residual layout is the strategy's to define: replicated-grad residuals
+    # are stacked per-device, ZeRO-shard residuals live in the gradient's own
+    # sharded layout.
     tp_degree = SH.mesh_sizes(mesh).get("model", 1)
-    if plan.sync_mode == "manual" and not plan.manual_sync_ok(tp_degree):
-        raise ValueError(
-            "sync_mode='manual' requires a fully-replicated layout: "
-            "all chunks persistent, no host offload, no zero1_persistent, "
-            "no swap blocks, and tp_degree == 1 (or dp_only). Got "
-            f"{plan.describe()} on tp_degree={tp_degree}. "
-            "See MemoryPlan.manual_sync_ok / docs/architecture.md."
-        )
-    manual_active = plan.sync_mode == "manual" and math.prod(mesh.devices.shape) > 1
-    sync_axes = SH.manual_sync_axes(mesh, dp)
-    n_sync = math.prod(SH.mesh_sizes(mesh)[a] for a in sync_axes)
-
+    strategy = SYNC.make_strategy(plan, mesh, tp_degree)
     compress = plan.grad_compress
-    if compress == "int8_ef":
-        if manual_active:
-            # Per-device residuals: each device feeds back what *its* wire
-            # transmission dropped, so the EF state is device-varying. It is
-            # stored stacked — leading axis n_sync, sharded over the sync
-            # axes — so the global view (checkpoints, metrics) is the true
-            # per-device state, not a false "replicated" one. Per-device
-            # bytes match the replicated xla layout exactly.
-            ef_axis = SH.manual_batch_pspec(1, mesh, dp)
+    ef_layout = strategy.ef_state(o_defs_one, g_shard)
+    if ef_layout is not None:
+        state_specs["ef"], state_shardings["ef"] = ef_layout
 
-            def ef_spec(d: ParamDef):
-                return jax.ShapeDtypeStruct(
-                    (n_sync,) + d.shape, jnp.float32,
-                    sharding=NamedSharding(mesh, ef_axis),
-                )
-
-            state_specs["ef"] = jax.tree.map(
-                ef_spec, o_defs_one, is_leaf=lambda x: isinstance(x, ParamDef))
-            state_shardings["ef"] = jax.tree.map(
-                lambda s: s.sharding, state_specs["ef"],
-                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
-        else:
-            # o_defs_one is already the fp32 view of every param def
-            state_specs["ef"] = SH.tree_specs(o_defs_one, g_shard)
-            state_shardings["ef"] = g_shard
-
-    # --- shared step-body pieces (xla and manual paths) ---------------------
-    def accumulate_grads(loss, params, batch, pin, sync_each, ef):
-        """Microbatch gradient accumulation, shared by both sync paths.
-
-        ``pin`` re-asserts gradient shardings (identity inside shard_map);
-        ``sync_each`` (manual path) syncs every microbatch's grads, threading
-        the EF residual ``ef`` through the scan so each wire transmission
-        feeds back into the next. Returns (grads, total, ce, ef)."""
-        mb = plan.microbatch
-        if mb == 1:
-            (total, ce), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
-            grads = pin(grads)
-            if sync_each is not None:
-                grads, ef = sync_each(grads, ef)
-            return grads, total, ce, ef
-
-        def split(x):
-            return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
-
-        micro = jax.tree.map(split, batch)
-
-        def acc_body(carry, mb_batch):
-            g_acc, l_acc, ef_c = carry
-            (tot, _ce), g = jax.value_and_grad(loss, has_aux=True)(params, mb_batch)
-            g = pin(g)
-            if sync_each is not None:
-                g, ef_c = sync_each(g, ef_c)
-            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
-            return (g_acc, l_acc + tot, ef_c), None
-
-        zeros = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
-        (grads, total, ef), _ = jax.lax.scan(
-            acc_body, (zeros, jnp.zeros((), jnp.float32), ef), micro)
-        grads = pin(jax.tree.map(lambda g: g / mb, grads))
-        return grads, total / mb, total / mb, ef
-
-    def apply_update(state, grads, total, ce, new_ef, metrics, *, host_plan, repin):
+    def apply_update(state, grads, total, ce, new_ef, metrics, *,
+                     host_plan, repin, grad_norm=None):
         """Optimizer update + new-state/metrics assembly, shared tail of both
         step bodies (manual passes host_plan=None, repin=False: no host
         chunks exist under manual eligibility, and device_put cannot appear
-        inside a shard_map body)."""
+        inside a shard_map body; it supplies grad_norm because its shard-
+        local gradient leaves need a cross-device norm for clipping)."""
         lr = lr_schedule(state["step"]) if lr_schedule else adam.lr
         new_params, new_opt, gnorm = OPT.adam_update(
-            state["params"], grads, state["opt"], adam, lr, host_plan=host_plan
+            state["params"], grads, state["opt"], adam, lr,
+            host_plan=host_plan, grad_norm=grad_norm,
         )
         if repin:  # keep shardings/memory kinds pinned through the update
             new_params = jax.tree.map(jax.device_put, new_params, p_shard)
@@ -471,95 +407,24 @@ def build_train_step(
         metrics.update({"loss": total, "ce": ce, "grad_norm": gnorm, "lr": jnp.asarray(lr)})
         return new_state, metrics
 
-    def step_fn(state, batch):
-        grads, total, ce, _ = accumulate_grads(
-            loss_fn, state["params"], batch, pin_grads, None, None)
-
-        metrics = {}
-        new_ef = None
-        if compress == "int8_ef":
-            grads, new_ef = COLL.compressed_tree_all_reduce(grads, state["ef"])
-            grads = pin_grads(grads)
-            new_ef = jax.tree.map(jax.lax.with_sharding_constraint, new_ef, g_shard)
-            metrics["ef_norm"] = OPT.global_norm(new_ef)
-        elif compress == "bf16":
-            grads = pin_grads(COLL.bf16_tree_all_reduce(grads))
-
-        return apply_update(state, grads, total, ce, new_ef, metrics,
-                            host_plan=host_plan_flat, repin=True)
-
-    # --- manual gradient sync: the whole step body under shard_map -----------
-    # Specs come from dist/sharding.py: state replicated (P() everywhere, which
-    # manual_sync_ok guarantees is the true layout), batch split over the sync
-    # axes. Inside the body there is no GSPMD — the only collectives in the
-    # program are the ones dist/collectives.py emits, so int8 payloads really
-    # are what crosses the wire (verify with benchmarks/calibrate_wire.py).
-    def build_manual_step_fn():
-        axes = sync_axes
-        local_b = shape.global_batch // n_sync
-        if shape.global_batch % n_sync or (plan.microbatch > 1 and local_b % plan.microbatch):
-            raise ValueError(
-                "manual sync splits the per-device batch shard into "
-                f"microbatches: global_batch={shape.global_batch} must divide "
-                f"by sync extent {n_sync} (and the local batch {local_b} by "
-                f"microbatch={plan.microbatch})"
-            )
-        local_loss = make_loss_fn(lambda x, kind="bsd": x, None)
-
-        def sync(g, ef):
-            return COLL.manual_tree_sync(g, ef, axes, compress)
-
-        def body(state, batch):
-            # EF arrives as this device's slice of the stacked per-device
-            # residual tree: (1, *param.shape) -> param-shaped local view
-            ef = (jax.tree.map(lambda e: e[0], state["ef"])
-                  if compress == "int8_ef" else None)
-
-            grads, total, ce, ef = accumulate_grads(
-                local_loss, state["params"], batch, lambda g: g, sync, ef)
-
-            # losses were computed on the local batch shard; average them
-            total = jax.lax.pmean(total, axes)
-            ce = jax.lax.pmean(ce, axes)
-
-            metrics = {}
-            new_ef = None
-            if compress == "int8_ef":
-                # global residual norm: the local norms differ per device, so
-                # reduce the squared sums for a replicated metric
-                sq = sum(jnp.sum(jnp.square(e.astype(jnp.float32)))
-                         for e in jax.tree.leaves(ef))
-                metrics["ef_norm"] = jnp.sqrt(jax.lax.psum(sq, axes))
-                new_ef = jax.tree.map(lambda e: e[None], ef)  # back to stacked
-
-            return apply_update(state, grads, total, ce, new_ef, metrics,
-                                host_plan=None, repin=False)
-
-        state_ps = SH.manual_state_pspecs(state_specs)
-        if compress == "int8_ef":
-            # device-varying state: split over the sync axes, never P()
-            state_ps["ef"] = jax.tree.map(
-                lambda _: SH.manual_batch_pspec(1, mesh, dp), state_specs["ef"],
-                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
-        batch_ps = jax.tree.map(
-            lambda s: SH.manual_batch_pspec(len(s.shape), mesh, dp), batch_specs,
-            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    if strategy.manual_active:
+        step_fn = strategy.build_step_fn(
+            loss=make_loss_fn(lambda x, kind="bsd": x, None, full=True),
+            apply_update=apply_update,
+            state_specs=state_specs,
+            batch_specs=batch_specs,
+            global_batch=shape.global_batch,
+            microbatch=plan.microbatch,
         )
-        metric_names = ["loss", "ce", "grad_norm", "lr"] + (
-            ["ef_norm"] if compress == "int8_ef" else [])
-        metrics_ps = {k: P() for k in metric_names}
-        # replication check off: the checker cannot see that a gather-based
-        # all-reduce (all_gather + identical local mean) yields replicated
-        # outputs; replication holds by construction (dist/collectives.py)
-        return shard_map(body, mesh, in_specs=(state_ps, batch_ps),
-                         out_specs=(state_ps, metrics_ps), check=False)
-
-    # 1-device meshes fall back to the local math path (the xla step applies
-    # identical wire numerics with zero collectives — same guard policy as
-    # the mesh-size check in dist/collectives.py); structural eligibility was
-    # already validated above, mesh size or not.
-    if manual_active:
-        step_fn = build_manual_step_fn()
+    else:
+        def step_fn(state, batch):
+            grads, total, ce, _ = SYNC.accumulate_grads(
+                loss_fn, state["params"], batch, plan.microbatch,
+                pin_grads, None, None)
+            grads, new_ef, metrics = strategy.finalize_grads(
+                grads, state.get("ef"), pin_grads, g_shard)
+            return apply_update(state, grads, total, ce, new_ef, metrics,
+                                host_plan=host_plan_flat, repin=True)
 
     def init(key):
         flat_defs = p_defs

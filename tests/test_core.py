@@ -62,6 +62,23 @@ def test_chunk_size_search_prefers_low_waste():
     assert best == 1000 and waste == 0
 
 
+def test_chunk_waste_oversized_params_are_exact_fit():
+    """Regression for the collapsed max()/if in chunk_waste: params larger
+    than the chunk get a dedicated exact-fit chunk — zero padding — and do
+    not poison neighboring chunks' accounting."""
+    # one oversized param alone: dedicated chunk, no waste
+    assert chunk_waste([5000], 1024) == 0
+    # exactly chunk-sized: also exact fit
+    assert chunk_waste([1024], 1024) == 0
+    # oversized between small params: small ones pad, the big one never does
+    sizes = [600, 5000, 600]
+    packed = pack_into_chunks(sizes, 1024)
+    assert [sum(c) for c in packed] == [600, 5000, 600]
+    assert chunk_waste(sizes, 1024) == (1024 - 600) * 2
+    # all-oversized stream: zero waste regardless of chunk size
+    assert chunk_waste([2048, 4096, 8192], 1024) == 0
+
+
 # ---------------------------------------------------------------------------
 # profiler
 # ---------------------------------------------------------------------------

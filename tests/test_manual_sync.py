@@ -1,9 +1,13 @@
 """Manual shard_map gradient sync (MemoryPlan.sync_mode="manual").
 
-Covers the ISSUE-2 acceptance criteria: numerics parity with the xla path on
-a multi-device mesh (CI forces 4 CPU devices), error-feedback residuals that
-carry across steps, the 1-device fallback guard, structural eligibility
-errors, the wire-cost calibration round trip, and the autotuner searching
+Covers the ISSUE-2 and ISSUE-3 acceptance criteria: numerics parity with the
+xla path on a multi-device mesh (CI forces 4 CPU devices) for both manual
+kinds — DDP-style replicated layouts and ZeRO-sharded layouts synced by the
+compressed reduce-scatter — error-feedback residuals that carry across steps
+(stacked per-device for replicated leaves, shard-sized for ZeRO leaves), s8
+payloads visible in the compiled HLO (all-gathers for DDP, all-to-alls for
+ZeRO), the 1-device fallback guard, the manual_sync_kind eligibility
+lattice, the wire-cost calibration round trip, and the autotuner searching
 sync_mode with calibrated factors."""
 import json
 
@@ -52,19 +56,26 @@ def persist_plan(**kw):
     return MemoryPlan(n_chunks=4, n_blocks=2, n_persist=4, **kw)
 
 
+def zero_plan(n_persist=0, **kw):
+    return MemoryPlan(n_chunks=4, n_blocks=2, n_persist=n_persist, **kw)
+
+
 # ---------------------------------------------------------------------------
 # numerics parity + EF carry-over
 # ---------------------------------------------------------------------------
 @needs_multi_device
-def test_manual_matches_xla_losses_over_ten_steps():
-    """Acceptance: int8+EF manual sync tracks the xla path within bf16
-    tolerance over >= 10 steps (the paths quantize before vs after the
-    reduce, so they are not bitwise equal — EF keeps them together)."""
+@pytest.mark.parametrize("n_persist", [4, 0], ids=["ddp", "zero"])
+def test_manual_matches_xla_losses_over_ten_steps(n_persist):
+    """Acceptance (ISSUE-2 ddp, ISSUE-3 zero): int8+EF manual sync tracks the
+    xla path within bf16 tolerance over >= 10 steps for both the replicated
+    (gather-synced) and the ZeRO-sharded (reduce-scattered) layouts. The
+    paths quantize before vs after the reduce, so they are not bitwise equal
+    — EF keeps them together."""
     mesh = dp_mesh()
     _, _, l_xla, _ = run_steps(
-        persist_plan(grad_compress="int8_ef", sync_mode="xla"), mesh)
+        zero_plan(n_persist, grad_compress="int8_ef", sync_mode="xla"), mesh)
     _, _, l_man, m_man = run_steps(
-        persist_plan(grad_compress="int8_ef", sync_mode="manual"), mesh)
+        zero_plan(n_persist, grad_compress="int8_ef", sync_mode="manual"), mesh)
     assert all(np.isfinite(l_man))
     # bf16 has ~8 mantissa bits: tolerate ~2 ulp of relative drift
     np.testing.assert_allclose(l_man, l_xla, rtol=2e-2)
@@ -81,6 +92,49 @@ def test_manual_int8_payload_is_on_the_wire():
     hlo = art.lower(donate=False).compile().as_text()
     s8_gathers = [ln for ln in hlo.splitlines() if "all-gather(" in ln and "s8[" in ln]
     assert s8_gathers, "expected int8 all-gathers in the manual-sync HLO"
+
+
+@needs_multi_device
+def test_manual_zero_int8_reduce_scatter_on_the_wire_and_shard_ef():
+    """Acceptance (ISSUE-3): a ZeRO-sharded manual plan compiles to s8
+    scatter-equivalent collectives (all_to_all of the quantized chunks), and
+    its EF residuals are shard-sized on each device yet globally
+    checkpointable (full logical shape, sharded layout)."""
+    mesh = dp_mesh()
+    plan = zero_plan(grad_compress="int8_ef", sync_mode="manual")
+    art = build_train_step(TINY, plan, mesh, SHAPE)
+    hlo = art.lower(donate=False).compile().as_text()
+    s8_a2a = [ln for ln in hlo.splitlines() if "all-to-all" in ln and "s8[" in ln]
+    assert s8_a2a, "expected s8 all-to-alls (compressed reduce-scatter) in HLO"
+
+    state = art.init(jax.random.PRNGKey(0))
+    jfn = jax.jit(art.fn, donate_argnums=(0,))
+    pipe = SyntheticTokenPipeline(TINY, SHAPE, seed=0)
+    state, _ = jfn(state, pipe.next_sync())
+
+    from repro.dist.sharding import leaf_sync_dim, zero_axes
+
+    axes = zero_axes(mesh)
+    ef_leaves = jax.tree.leaves(state["ef"])
+    param_leaves = jax.tree.leaves(state["params"])
+    sharded = 0
+    for e, p in zip(ef_leaves, param_leaves):
+        if e.shape == p.shape:
+            # ZeRO-sharded residual: full logical (= param) shape, laid out
+            # in the gradient's own sharded spec — checkpointable, and each
+            # device holds only its 1/N_DEV shard
+            d = leaf_sync_dim(e.sharding, axes)
+            assert d is not None
+            sharded += 1
+            local = e.addressable_shards[0].data.shape
+            assert local[d] == e.shape[d] // N_DEV
+        else:
+            # replicated leaf: stacked per-device residual, as in DDP
+            assert e.shape == (N_DEV,) + p.shape
+    assert sharded > 0, "zero plan should have ZeRO-sharded EF leaves"
+    # the residuals are checkpoint round-trippable as plain arrays
+    as_np = [np.asarray(e) for e in ef_leaves]
+    assert any(np.abs(a).max() > 0 for a in as_np)
 
 
 @needs_multi_device
@@ -122,23 +176,30 @@ def test_manual_microbatch_sync_per_microbatch():
 # ---------------------------------------------------------------------------
 def test_manual_one_device_mesh_falls_back_to_local_math():
     """Same guard policy as the mesh-size checks in dist/collectives.py: a
-    1-device mesh takes the local math path (wire numerics, no collectives)."""
+    1-device mesh takes the local math path (wire numerics, no collectives) —
+    for both eligibility kinds."""
     mesh = dp_mesh(1)
-    plan = persist_plan(grad_compress="int8_ef", sync_mode="manual")
-    _, _, losses, metrics = run_steps(plan, mesh, steps=2)
-    assert all(np.isfinite(losses))
-    assert float(metrics["ef_norm"]) > 0
+    for plan in (persist_plan(grad_compress="int8_ef", sync_mode="manual"),
+                 zero_plan(grad_compress="int8_ef", sync_mode="manual")):
+        _, _, losses, metrics = run_steps(plan, mesh, steps=2)
+        assert all(np.isfinite(losses))
+        assert float(metrics["ef_norm"]) > 0
 
 
-def test_manual_rejects_non_replicated_layouts():
+def test_manual_rejects_unlowerable_layouts():
     # eligibility is validated on every mesh size — including 1 device, so
-    # locally-exercised code fails the same way it would deployed
-    for n in {1, N_DEV}:
-        with pytest.raises(ValueError, match="manual"):
-            build_train_step(
-                TINY, MemoryPlan(n_chunks=4, n_blocks=2, grad_compress="int8_ef",
-                                 sync_mode="manual"),
-                dp_mesh(n), SHAPE)
+    # locally-exercised code fails the same way it would deployed. ZeRO
+    # plans lower since the sync-strategy layer; swap/host/zero1 still raise.
+    bad = [
+        zero_plan(n_swap=1, grad_compress="int8_ef", sync_mode="manual"),
+        zero_plan(n_host=2, grad_compress="int8_ef", sync_mode="manual"),
+        persist_plan(zero1_persistent=True, grad_compress="int8_ef",
+                     sync_mode="manual"),
+    ]
+    for plan in bad:
+        for n in {1, N_DEV}:
+            with pytest.raises(ValueError, match="manual"):
+                build_train_step(TINY, plan, dp_mesh(n), SHAPE)
 
 
 def test_search_rejects_manual_sync_without_compression():
@@ -150,13 +211,36 @@ def test_search_rejects_manual_sync_without_compression():
         search(w, compress="off", sync="manual")
 
 
-def test_manual_sync_ok_predicate():
-    ok = persist_plan(grad_compress="int8_ef", sync_mode="manual")
-    assert ok.manual_sync_ok(tp_degree=1)
-    assert not ok.manual_sync_ok(tp_degree=4)  # TP shards the params
-    assert persist_plan(dp_only=True).manual_sync_ok(tp_degree=4)
-    assert not MemoryPlan(4, 2).manual_sync_ok(1)  # ZeRO-sharded
-    assert not MemoryPlan(4, 2, n_persist=4, n_swap=1).manual_sync_ok(1)
+LATTICE = [
+    # (n_persist, n_host, n_swap, tp, dp_only, zero1) -> expected kind
+    ((4, 0, 0, 1, False, False), "ddp"),
+    ((4, 0, 0, 4, False, False), None),    # TP shards the params
+    ((4, 0, 0, 4, True, False), "ddp"),    # dp_only absorbs the model axis
+    ((0, 0, 0, 1, False, False), "zero"),  # ISSUE-3: previously None
+    ((2, 0, 0, 1, False, False), "zero"),  # mixed persist/ZeRO
+    ((0, 0, 0, 1, True, False), "zero"),   # dp_only moot at tp=1
+    ((0, 0, 0, 4, False, False), None),    # ZeRO + live TP axis: no kind
+    ((0, 0, 0, 4, True, False), None),     # dp_only can't fix shard-axis
+    ((0, 2, 0, 1, False, False), None),    # host memory kinds in shard_map
+    ((4, 0, 1, 1, False, False), None),    # swap offload in shard_map
+    ((0, 0, 1, 1, False, False), None),
+    ((4, 0, 0, 1, False, True), None),     # zero1_persistent
+    ((2, 0, 0, 1, False, True), None),
+]
+
+
+@pytest.mark.parametrize("cell,kind", LATTICE)
+def test_manual_sync_kind_lattice(cell, kind):
+    """manual_sync_kind over the plan lattice (persist x host x swap x TP x
+    dp_only x zero1): previously-ineligible ZeRO plans now report "zero",
+    previously-raising combinations still report None (and raise in
+    build_train_step — see test_manual_rejects_unlowerable_layouts)."""
+    n_persist, n_host, n_swap, tp, dp_only, zero1 = cell
+    plan = MemoryPlan(4, 2, n_persist=n_persist, n_host=n_host, n_swap=n_swap,
+                      dp_only=dp_only, zero1_persistent=zero1)
+    assert plan.manual_sync_kind(tp_degree=tp) == kind
+    # manual_sync_ok stays the "can lower at all" predicate
+    assert plan.manual_sync_ok(tp) == (kind is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +282,46 @@ def test_packaged_calibration_overrides_hardcoded_constant():
     assert CM.wire_factor("xla", "int8_ef") == 1.0
     assert CM.wire_factor("xla", "int8_ef") != CM.GRAD_WIRE_FACTOR["int8_ef"]
     assert CM.wire_factor("manual", "int8_ef") < 1.0  # real compression
+    # the reduce-scatter pipeline's factor is calibrated too (ISSUE-3): the
+    # s8 all_to_all payload is ~half the bf16 bytes at scatter topology
+    assert CM.wire_factor("manual", "int8_ef_rs") < 1.0
+
+
+def test_wire_factor_rs_falls_back_for_pre_zero_calibrations(tmp_path):
+    """Calibration JSONs written before the reduce-scatter pipeline existed
+    lack the int8_ef_rs key; wire_factor falls back to the analytic default
+    instead of KeyError-ing the whole search."""
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps({"backends": {jax.default_backend(): {
+        "wire_factors": {"xla": {"none": 1.0, "bf16": 1.0, "int8_ef": 1.0},
+                         "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5}}}}}))
+    try:
+        CM.load_wire_calibration(str(path))
+        assert CM.wire_factor("manual", "int8_ef_rs") == \
+            CM.DEFAULT_WIRE_FACTORS["manual"]["int8_ef_rs"]
+    finally:
+        CM.reset_wire_calibration()
+
+
+def test_t_reduce_zero_manual_uses_scatter_topology():
+    """For a ZeRO-sharded chunk the manual int8 reduce moves (z-1)/z of the
+    compressed bytes (all_to_all), vs the DDP gather pipeline's (z-1) full
+    payloads for a persistent chunk — the new term the autotuner ranks with."""
+    from repro.core import TPU_V5E, build_workload
+    from repro.core.hardware import MeshSpec
+
+    w = build_workload(TINY, SHAPE, MeshSpec((4, 1), ("data", "model")), TPU_V5E)
+    chunk = w.chunks[1]
+    z = w.mesh.zero_degree
+    manual_zero = zero_plan(grad_compress="int8_ef", sync_mode="manual")
+    manual_ddp = persist_plan(grad_compress="int8_ef", sync_mode="manual")
+    t_rs = w.t_reduce(chunk, manual_zero)
+    t_gather = w.t_reduce(chunk, manual_ddp)
+    # same payload ratio, topologies differ by ~z: scatter divides by z
+    np.testing.assert_allclose(t_gather / t_rs, z, rtol=0.1)
+    # and the compressed reduce-scatter beats the uncompressed xla one
+    t_xla = w.t_reduce(chunk, zero_plan(grad_compress="none", sync_mode="xla"))
+    assert t_rs < t_xla
 
 
 def test_t_reduce_uses_calibrated_factor(tmp_path):
@@ -243,3 +367,26 @@ def test_autotuner_searches_manual_sync_on_dp_mesh():
     assert res2.feasible
     if res2.plan.sync_mode == "manual":
         assert res2.plan.manual_sync_ok(w.mesh.tp_degree)
+
+
+def test_autotuner_emits_zero_manual_when_persist_does_not_fit():
+    """ISSUE-3: manual candidates are no longer all-persist-or-nothing — when
+    the replicated layout busts capacity, the search emits a ZeRO-sharded
+    manual plan (kind "zero") ranked with the reduce-scatter wire term."""
+    from repro.core import TPU_V5E, build_workload, estimate_memory, search
+    from repro.core.hardware import MeshSpec
+
+    w = build_workload(TINY, SHAPE, MeshSpec((4,), ("data",)), TPU_V5E)
+    full = estimate_memory(
+        w, persist_plan(grad_compress="int8_ef", sync_mode="manual")).peak
+    lo = estimate_memory(
+        w, zero_plan(grad_compress="int8_ef", sync_mode="manual")).peak
+    assert lo < full  # sharding the states must save memory
+    cap = (lo + full) / 2
+    res = search(w, capacity_bytes=cap, compress="on", sync="manual",
+                 allow_host=False, allow_swap=False)
+    assert res.feasible
+    assert res.plan.sync_mode == "manual"
+    assert res.plan.n_persist < w.n_chunks
+    assert res.plan.manual_sync_kind(w.mesh.tp_degree) == "zero"
+    assert res.memory.peak < cap
