@@ -24,12 +24,14 @@ GRAD_WIRE_FACTOR constant:
     all-gathers in the HLO), so the factor reflects the real quantization
     ratio.
 
-The manual *reduce-scatter* pipeline (ZeRO-sharded plans,
-``manual_sync_kind == "zero"``) is calibrated from a zero-persist plan: the
-s8 all_to_all bytes in its HLO over the modeled scatter-topology bytes at
-factor 1 become the ``int8_ef_rs`` factor. Only the s8 collectives count for
-that fit — the zero-manual program also carries the bf16 param all-gathers,
-which belong to t_gather, not t_reduce.
+The manual *reduce-scatter* pipeline (ZeRO-sharded plans) is calibrated
+from a zero-persist **zero3** plan: the s8 all_to_all bytes in its HLO over
+the modeled scatter-topology bytes at factor 1 become the ``int8_ef_rs``
+factor, and its non-s8 all-gather bytes over the modeled per-chunk gather
+pipeline (FWD + unbuffered-BWD re-gathers) become the ``gather_bf16``
+factor t_gather applies to manual plans. The two collective families are
+split per fit — s8 belongs to t_reduce, bf16 gathers to t_gather. A zero2
+(up-front gather) plan is measured alongside for the record.
 
 The EF-residual memory term is calibrated the same run: the fp32 residual
 tree's bytes over the grad bytes, measured from the built train state specs.
@@ -59,20 +61,27 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, reduced
 from repro.configs.base import ShapeConfig
 from repro.core.chunks import chunk_inventory
+from repro.core.cost_model import CALIBRATION_SCHEMA_VERSION
 from repro.core.plan import MemoryPlan
 from repro.launch.roofline import parse_collectives
 from repro.train.step_builder import build_train_step
 
-CONFIGS = [  # (key, sync_mode, grad_compress, n_persist of the 4-chunk plan)
-    ("xla/none", "xla", "none", 4),
-    ("xla/bf16", "xla", "bf16", 4),
-    ("xla/int8_ef", "xla", "int8_ef", 4),
-    ("manual/bf16", "manual", "bf16", 4),
-    ("manual/int8_ef", "manual", "int8_ef", 4),
-    # ZeRO-sharded manual: compressed reduce-scatter ("int8_ef_rs" factor)
-    ("manual_zero/int8_ef", "manual", "int8_ef", 0),
+# (key, sync_mode, grad_compress, n_persist of the 4-chunk plan, zero_stage)
+CONFIGS = [
+    ("xla/none", "xla", "none", 4, 3),
+    ("xla/bf16", "xla", "bf16", 4, 3),
+    ("xla/int8_ef", "xla", "int8_ef", 4, 3),
+    ("manual/bf16", "manual", "bf16", 4, 3),
+    ("manual/int8_ef", "manual", "int8_ef", 4, 3),
+    # ZeRO-sharded manual, both dataflows. "zero3" (lazy per-chunk gather)
+    # is the fit source for the "int8_ef_rs" reduce-scatter factor (the s8
+    # all_to_all payload of the gather VJP) AND the "gather_bf16" param-
+    # gather factor (its bf16 all-gathers vs the modeled per-chunk topology
+    # bytes); "zero2" (up-front gather) is measured for the record.
+    ("manual_zero2/int8_ef", "manual", "int8_ef", 0, 2),
+    ("manual_zero3/int8_ef", "manual", "int8_ef", 0, 3),
 ]
-DRY_RUN_KEYS = ("xla/none", "manual_zero/int8_ef")
+DRY_RUN_KEYS = ("xla/none", "manual_zero3/int8_ef")
 
 
 def _spec_bytes(tree) -> int:
@@ -83,15 +92,18 @@ def _spec_bytes(tree) -> int:
     )
 
 
-def _wire_bytes(hlo: str) -> tuple[float, float, float]:
-    """(raw, fp32-corrected, s8-only) per-chip serialized collective bytes.
+def _wire_bytes(hlo: str) -> tuple[float, float, float, float]:
+    """(raw, fp32-corrected, s8-only, param-gather) per-chip serialized
+    collective bytes.
 
     The corrected number halves fp32 payloads — the CPU backend upcasts bf16
     compute to fp32, dragging the gradient reduce with it; corrected
     approximates what a bf16-native backend moves (see launch/roofline.py).
     The s8-only number isolates the compressed gradient payload — what the
     reduce-scatter fit needs, because the zero-manual program also carries
-    bf16 param all-gathers that belong to t_gather, not t_reduce.
+    bf16 param all-gathers. Those belong to the fourth number: non-s8
+    all-gather bytes (fp32-corrected), the measurement side of the
+    ``gather_bf16`` factor t_gather consumes.
     """
     ops = parse_collectives(hlo)
     raw = sum(o.wire_bytes() * o.multiplier for o in ops)
@@ -99,7 +111,11 @@ def _wire_bytes(hlo: str) -> tuple[float, float, float]:
         o.wire_bytes() * o.multiplier * (0.5 if o.dtype == "f32" else 1.0) for o in ops
     )
     s8 = sum(o.wire_bytes() * o.multiplier for o in ops if o.dtype in ("s8", "u8"))
-    return raw, corrected, s8
+    gather = sum(
+        o.wire_bytes() * o.multiplier * (0.5 if o.dtype == "f32" else 1.0)
+        for o in ops if o.kind == "all-gather" and o.dtype not in ("s8", "u8")
+    )
+    return raw, corrected, s8, gather
 
 
 def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> dict:
@@ -118,27 +134,48 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
     def modeled_factor1(key: str) -> float:
         """Per-chip wire bytes the cost model predicts at wire_factor == 1
         (mirror of cost_model.t_reduce's topology terms)."""
-        if key == "manual_zero/int8_ef":
+        if key.startswith("manual_zero"):
             return grad_bytes * (z - 1) / z  # all_to_all reduce-scatter
         if key == "manual/int8_ef":
             return grad_bytes * (z - 1)  # gather-based: z-1 payloads received
         return 2.0 * grad_bytes * (z - 1) / z  # ring all-reduce, replicated grads
 
+    def modeled_gather_factor1(plan) -> float:
+        """Per-chip param-gather bytes at gather_bf16 == 1: the cost model's
+        per-chunk pipeline — every non-persistent chunk gathered in FWD, and
+        *block* chunks re-gathered in BWD when unbuffered (except the first
+        chunk BWD visits, whose weights are still live; embed/head/encoder
+        are gathered at point of use outside any remat region, so their
+        gathered leaves survive to BWD like the xla path's fetch) — at ring
+        topology."""
+        fwd = sum(c.param_bytes for c in chunks
+                  if plan.chunk_placement(c.index) != "persist")
+        order = list(range(len(chunks) - 1, -1, -1))
+        bwd = sum(
+            chunks[i].param_bytes for i in order[1:]
+            if chunks[i].is_block
+            and plan.chunk_placement(i) != "persist"
+            and not plan.chunk_buffered(i))
+        return (fwd + bwd) * (z - 1) / z
+
     measured: dict[str, dict] = {}
     ef_factor = None
-    for key, sync_mode, compress, n_persist in CONFIGS:
+    for key, sync_mode, compress, n_persist, zero_stage in CONFIGS:
         if keys is not None and key not in keys:
             continue
         plan = MemoryPlan(n_chunks=4, n_blocks=2, n_persist=n_persist,
-                          grad_compress=compress, sync_mode=sync_mode)
+                          grad_compress=compress, sync_mode=sync_mode,
+                          zero_stage=zero_stage)
         art = build_train_step(cfg, plan, mesh, shape)
         compiled = art.lower(donate=False).compile()
-        raw, corrected, s8 = _wire_bytes(compiled.as_text())
+        raw, corrected, s8, gather = _wire_bytes(compiled.as_text())
         measured[key] = {
             "wire_bytes_raw": raw,
             "wire_bytes_corrected": corrected,
             "wire_bytes_s8": s8,
+            "wire_bytes_param_gather": gather,
             "modeled_factor1_bytes": modeled_factor1(key),
+            "modeled_gather_factor1_bytes": modeled_gather_factor1(plan),
         }
         if compress == "int8_ef" and n_persist == 4 and ef_factor is None:
             ef_factor = _spec_bytes(art.state_specs["ef"]) / grad_bytes
@@ -147,19 +184,25 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
     # collective inventory, so overheads cancel); manual factors against the
     # model's own topology prediction at factor 1 — the DDP gather fit uses
     # all corrected collective bytes (its program has no other collectives),
-    # the zero reduce-scatter fit uses only the s8 bytes (its program also
-    # moves bf16 param gathers, which t_gather prices, not t_reduce)
+    # the zero3 reduce-scatter fit uses only the s8 bytes and the gather fit
+    # only the non-s8 all-gather bytes (the zero programs carry both, and
+    # t_reduce/t_gather price them separately)
     factors: dict[str, dict] = {"xla": {"none": 1.0}, "manual": {"none": 1.0}}
     xla_base = max(measured.get("xla/none", {}).get("wire_bytes_corrected", 0.0), 1.0)
-    for key, sync_mode, compress, _ in CONFIGS[1:]:
+    for key, sync_mode, compress, _, _ in CONFIGS[1:]:
         if key not in measured:
             continue
         m = measured[key]
         if sync_mode == "xla":
             factors["xla"][compress] = round(m["wire_bytes_corrected"] / xla_base, 4)
-        elif key == "manual_zero/int8_ef":
+        elif key == "manual_zero3/int8_ef":
             factors["manual"]["int8_ef_rs"] = round(
                 m["wire_bytes_s8"] / m["modeled_factor1_bytes"], 4)
+            factors["manual"]["gather_bf16"] = round(
+                m["wire_bytes_param_gather"]
+                / max(m["modeled_gather_factor1_bytes"], 1.0), 4)
+        elif key == "manual_zero2/int8_ef":
+            pass  # recorded in `fit`; zero3 is the fit source for both factors
         else:
             factors["manual"][compress] = round(
                 m["wire_bytes_corrected"] / m["modeled_factor1_bytes"], 4)
@@ -193,9 +236,11 @@ def main() -> int:
     if args.dry_run:
         entry = calibrate(keys=DRY_RUN_KEYS)
         rs = entry["wire_factors"]["manual"].get("int8_ef_rs")
+        gf = entry["wire_factors"]["manual"].get("gather_bf16")
         base = entry["fit"]["measured"]["xla/none"]["wire_bytes_corrected"]
         print(f"[calibrate_wire --dry-run] backend={backend} "
-              f"xla/none corrected bytes={base:.0f} int8_ef_rs={rs}")
+              f"xla/none corrected bytes={base:.0f} int8_ef_rs={rs} "
+              f"gather_bf16={gf}")
         if base <= 0:
             print("[calibrate_wire --dry-run] FAIL: no collective bytes "
                   "measured for the uncompressed reduce")
@@ -205,12 +250,20 @@ def main() -> int:
                   f"{rs} outside the sane band [0.1, 1.2] — the s8 payload "
                   "is no longer (or no longer only) what crosses the wire")
             return 1
+        if gf is None or not (0.2 <= gf <= 3.0):
+            print("[calibrate_wire --dry-run] FAIL: param-gather factor "
+                  f"{gf} outside the sane band [0.2, 3.0] — the zero3 lazy "
+                  "per-chunk gathers no longer match the modeled per-chunk "
+                  "pipeline (up-front gather regression, or gathers duplicated"
+                  " beyond the BWD re-gather)")
+            return 1
         print("[calibrate_wire --dry-run] OK")
         return 0
 
     entry = calibrate()
     doc = {
         "generated_by": "benchmarks/calibrate_wire.py",
+        "version": CALIBRATION_SCHEMA_VERSION,
         "backends": {backend: entry},
     }
     os.makedirs(args.out, exist_ok=True)
@@ -233,8 +286,9 @@ def main() -> int:
         # drop the bulky per-config measurements from the installed copy
         existing[backend] = {k: v for k, v in entry.items() if k != "fit"}
         with open(install_path, "w") as f:
-            json.dump({"generated_by": doc["generated_by"], "backends": existing},
-                      f, indent=2)
+            json.dump({"generated_by": doc["generated_by"],
+                       "version": CALIBRATION_SCHEMA_VERSION,
+                       "backends": existing}, f, indent=2)
         print(f"[calibrate_wire] installed {install_path}")
     return 0
 

@@ -23,15 +23,10 @@ import numpy as np
 from repro.configs import ARCHS, reduced
 from repro.configs.base import ShapeConfig
 from repro.core import build_workload, estimate_memory
-from repro.core.hardware import HardwareSpec, MeshSpec
+from repro.core.hardware import LOCAL_CPU_HW as CPU_HW, MeshSpec
 from repro.core.plan import MemoryPlan
 from repro.launch.mesh import make_local_mesh
 from repro.train.step_builder import build_train_step
-
-CPU_HW = HardwareSpec(
-    name="cpu-host", peak_flops=5e10, hbm_bytes=32e9, hbm_bw=20e9,
-    ici_bw=10e9, host_bw=10e9, dcn_bw=1e9, host_mem_bytes=32e9,
-)
 
 
 def _local_mesh_spec(mesh) -> MeshSpec:
@@ -58,6 +53,19 @@ def plans_under_test(nc: int, nb: int) -> list[tuple[str, MemoryPlan]]:
     ]
 
 
+def manual_plans_under_test(nc: int, nb: int) -> list[tuple[str, MemoryPlan]]:
+    """Manual-sync ZeRO plans (ISSUE-4): both dataflows plus a buffered zero3,
+    so the CI --fail-threshold gate covers the lazy-gather path's memory
+    model, not just the xla lowering."""
+    mk = lambda **kw: MemoryPlan(nc, nb, grad_compress="int8_ef",  # noqa: E731
+                                 sync_mode="manual", **kw)
+    return [
+        ("manual_zero2", mk(zero_stage=2)),
+        ("manual_zero3", mk(zero_stage=3)),
+        ("manual_zero3_buf", mk(zero_stage=3, n_buffer=nc)),
+    ]
+
+
 def memory_fidelity(arch: str = "llama3-405b") -> list[dict]:
     cfg = dataclasses.replace(
         reduced(ARCHS[arch], num_layers=4, d_model=512, d_ff=2048, vocab_size=4096,
@@ -67,8 +75,8 @@ def memory_fidelity(arch: str = "llama3-405b") -> list[dict]:
     shape = ShapeConfig("fid", 512, 8, "train")
     mesh = make_local_mesh()
     w = build_workload(cfg, shape, _local_mesh_spec(mesh), CPU_HW)
-    rows = []
-    for name, plan in plans_under_test(w.n_chunks, w.n_blocks):
+
+    def row(name, plan, w, mesh):
         est = estimate_memory(w, plan)
         art = build_train_step(cfg, plan, mesh, shape)
         comp = art.lower().compile()
@@ -76,12 +84,25 @@ def memory_fidelity(arch: str = "llama3-405b") -> list[dict]:
         measured = m.temp_size_in_bytes + m.argument_size_in_bytes
         # model predicts states+acts+workspace; args hold states: compare totals
         predicted = est.peak
-        rows.append({
+        return {
             "plan": name,
             "predicted_gb": round(predicted / 1e9, 4),
             "xla_gb": round(measured / 1e9, 4),
             "ratio": round(predicted / max(measured, 1), 3),
-        })
+        }
+
+    rows = [row(name, plan, w, mesh)
+            for name, plan in plans_under_test(w.n_chunks, w.n_blocks)]
+
+    # manual ZeRO requires tp == 1; the local mesh puts the forced devices on
+    # the model axis, so these rows get their own pure-DP mesh (and a matching
+    # analytic MeshSpec — prediction and compilation must agree on z)
+    dp_mesh = jax.make_mesh(
+        (len(jax.devices()), 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    w_dp = build_workload(cfg, shape, _local_mesh_spec(dp_mesh), CPU_HW)
+    rows += [row(name, plan, w_dp, dp_mesh)
+             for name, plan in manual_plans_under_test(w_dp.n_chunks, w_dp.n_blocks)]
     return rows
 
 

@@ -5,9 +5,14 @@ fault-tolerant loop with checkpoint/auto-resume.
     PYTHONPATH=src python examples/train_lm.py                 # ~25M, fast
     PYTHONPATH=src python examples/train_lm.py --full          # mamba2-130m
     PYTHONPATH=src python examples/train_lm.py --resume-demo   # kill + resume
+    PYTHONPATH=src python examples/train_lm.py --plan zero3    # manual ZeRO-3
 
 The --resume-demo flag trains, simulates a crash halfway, then restarts from
 the latest checkpoint and verifies the loss continues from where it left off.
+--plan zero2/zero3 shards the model states (manual compressed sync by
+default; the printed plan summary shows the ZeRO-3 lazy-gather memory win
+over the up-front-gather zero2 layout). On a 1-device host the manual plans
+fall back to the numerics-identical local-math path.
 """
 import argparse
 import dataclasses
@@ -17,7 +22,7 @@ import jax
 
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.core.plan import fully_resident_plan
+from repro.core.plan import MemoryPlan, fully_resident_plan
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.pipeline import SyntheticTokenPipeline
 from repro.launch.mesh import make_local_mesh
@@ -28,27 +33,85 @@ from repro.train.loop import LoopConfig, train_loop
 from repro.train.step_builder import build_train_step
 
 
+def make_plan(args, nc: int, nb: int) -> MemoryPlan:
+    if args.plan == "resident":
+        plan = fully_resident_plan(nc, nb)
+        if args.sync_mode != "xla" or args.compress != "none":
+            plan = dataclasses.replace(
+                plan, sync_mode=args.sync_mode, grad_compress=args.compress)
+        return plan
+    # ZeRO-sharded: manual compressed sync is the point of these plans
+    return MemoryPlan(
+        nc, nb, n_persist=0, n_buffer=args.n_buffer,
+        zero_stage=3 if args.plan == "zero3" else 2,
+        sync_mode=args.sync_mode, grad_compress=args.compress,
+    )
+
+
+def plan_summary(cfg, shape, mesh, plan) -> str:
+    """Printed plan line: describe() + manual kind + estimated per-device
+    peak (and the zero3-vs-zero2 delta, the ISSUE-4 memory win)."""
+    from repro.core import build_workload, estimate_memory
+    from repro.core.hardware import LOCAL_CPU_HW, MeshSpec
+
+    w = build_workload(cfg, shape, MeshSpec(
+        tuple(mesh.devices.shape), tuple(mesh.axis_names)), LOCAL_CPU_HW)
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    kind = plan.manual_sync_kind(tp) if plan.sync_mode == "manual" else None
+    est = estimate_memory(w, plan)
+    line = (f"plan={plan.describe()} kind={kind or 'xla'} "
+            f"est_peak={est.peak / 1e9:.3f}GB")
+    if kind == "zero3":
+        est2 = estimate_memory(w, dataclasses.replace(plan, zero_stage=2))
+        line += (f" (zero2 would be {est2.peak / 1e9:.3f}GB: lazy per-chunk "
+                 f"gather saves {(est2.peak - est.peak) / 1e6:.0f}MB "
+                 f"gathered-params + grad-workspace)")
+    return line
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="use the real mamba2-130m config")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--resume-demo", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--plan", choices=["resident", "zero2", "zero3"],
+                    default="resident",
+                    help="resident: everything replicated; zero2/zero3: "
+                         "ZeRO-sharded states with manual compressed sync "
+                         "(zero3 = lazy per-chunk gather)")
+    ap.add_argument("--sync-mode", choices=["xla", "manual"], default=None,
+                    help="gradient-reduce ownership (default: manual for "
+                         "zero2/zero3 plans, xla for resident)")
+    ap.add_argument("--compress", choices=["none", "bf16", "int8_ef"],
+                    default=None,
+                    help="gradient wire compression (default: int8_ef for "
+                         "manual plans, none for xla)")
     args = ap.parse_args()
+    if args.sync_mode is None:
+        args.sync_mode = "xla" if args.plan == "resident" else "manual"
+    if args.compress is None:
+        args.compress = "int8_ef" if args.sync_mode == "manual" else "none"
+    args.n_buffer = 0
 
     cfg = get_config("mamba2-130m")
     if not args.full:
         # ~25M-param same-family variant so CPU steps stay ~1s
         cfg = dataclasses.replace(cfg, num_layers=8, d_model=512, vocab_size=8192)
     shape = ShapeConfig("train", seq_len=256, global_batch=8, mode="train")
-    mesh = make_local_mesh()
-    plan = fully_resident_plan(len(chunk_inventory(cfg)), num_repeats(cfg))
+    # manual ZeRO needs tp == 1: fold every local device onto the data axis
+    n_dev = len(jax.devices())
+    mesh = (make_local_mesh() if args.plan == "resident"
+            else jax.make_mesh((n_dev, 1), ("data", "model"),
+                               axis_types=(jax.sharding.AxisType.Auto,) * 2))
+    plan = make_plan(args, len(chunk_inventory(cfg)), num_repeats(cfg))
     art = build_train_step(
         cfg, plan, mesh, shape,
         adam=AdamConfig(lr=1e-3),
         lr_schedule=cosine_schedule(1e-3, warmup=20, total=args.steps),
     )
-    print(f"[train_lm] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, plan={plan.describe()}")
+    print(f"[train_lm] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          + plan_summary(cfg, shape, mesh, plan))
 
     shutil.rmtree(args.ckpt_dir, ignore_errors=True)
     mgr = CheckpointManager(args.ckpt_dir, keep=2)

@@ -29,8 +29,11 @@ Beyond-paper axes (docs/cost_model.md documents every knob and its units):
     fully-replicated layouts, compressed reduce-scatter for ZeRO-sharded
     ones). "manual" candidates are only emitted for plans with a non-None
     ``MemoryPlan.manual_sync_kind`` — exactly what the step builder can
-    lower — which since the sync-strategy layer includes ZeRO-sharded plans
-    (no swap/host/TP), not just all-persist ones.
+    lower. ZeRO-sharded manual cells emit both dataflows: "zero3" (lazy
+    per-chunk gather, true ZeRO-3 param memory — n_persist x n_buffer are
+    binary-searched like the xla cells) and "zero2" (up-front gather, no
+    re-gathers, ZeRO-2 memory), letting the cost models arbitrate the
+    memory-vs-regather trade per workload.
 """
 from __future__ import annotations
 
@@ -186,44 +189,68 @@ def _search_inner(w, capacity, ubs, sp_vals, gc_vals, use_dp, real_tp, allow_hos
             for n_ckpt in _grid(nb - n_swap, max_checkpoint_points):
               for cg in ((1,) if n_ckpt == 0 else (1, 2, 4)):
                for hp in (True, False):  # full host offload vs ZeRO-Offload split
-                evaluated += 1
 
-                def mk(n_persist=0, n_buffer=0, n_host=0):
+                def mk(n_persist=0, n_buffer=0, n_host=0, zero_stage=3):
                     return MemoryPlan(
                         nc, nb,
                         n_persist=n_persist, n_buffer=n_buffer, n_host=n_host,
                         n_swap=n_swap, n_checkpoint=n_ckpt, microbatch=ub,
                         seq_shard_acts=use_sp, dp_only=use_dp, ckpt_group=cg,
                         host_params=hp, grad_compress=gc, sync_mode=sync,
+                        zero_stage=zero_stage,
                     )
 
                 if manual:
-                    # manual sync lowers for no-swap/no-host layouts: the
-                    # "zero" kind covers ZeRO-sharded chunks via the
-                    # compressed reduce-scatter, "ddp" the all-persist plan
-                    # (host_params is moot with zero host chunks, buffering
-                    # is moot because the zero body gathers everything)
+                    # manual sync lowers for no-swap/no-host layouts. ZeRO-
+                    # sharded chunks sync via the compressed reduce-scatter in
+                    # two dataflows: "zero3" (lazy per-chunk gather — true
+                    # ZeRO-3 param memory, so n_persist AND n_buffer are
+                    # searchable exactly like the xla cells) and "zero2"
+                    # (up-front gather: cheapest wire, n_buffer moot because
+                    # the body gathers everything). All-persist plans lower
+                    # as "ddp" (host_params is moot with zero host chunks).
+                    # `evaluated` counts per candidate: one per stage here,
+                    # one per cell on the xla branch below.
                     if not hp:
                         continue
-                    n_persist = _max_feasible(
-                        0, nc, lambda v: _fits(w, mk(n_persist=v), capacity))
-                    if n_persist < 0:
-                        continue
-                    plan = mk(n_persist=n_persist)
-                    if plan.manual_sync_kind(real_tp) is None:
-                        # dp_only with a live TP axis only lowers DDP-style:
-                        # the all-persist plan is the one manual candidate
-                        plan = mk(n_persist=nc)
-                        if (plan.manual_sync_kind(real_tp) is None
-                                or not _fits(w, plan, capacity)):
+                    for stage in (3, 2):
+                        evaluated += 1
+                        n_persist = _max_feasible(
+                            0, nc, lambda v, _s=stage: _fits(
+                                w, mk(n_persist=v, zero_stage=_s), capacity))
+                        if n_persist < 0:
                             continue
-                    rt = estimate_runtime(w, plan)
-                    mem = estimate_memory(w, plan)
-                    cand = SearchResult(plan, rt, mem, evaluated, 0.0, True)
-                    if best is None or rt.t_iteration < best.runtime.t_iteration:
-                        best = cand
+                        plan = mk(n_persist=n_persist, zero_stage=stage)
+                        if plan.manual_sync_kind(real_tp) is None:
+                            # dp_only with a live TP axis only lowers DDP-
+                            # style: the all-persist plan is the one manual
+                            # candidate
+                            plan = mk(n_persist=nc, zero_stage=stage)
+                            if (plan.manual_sync_kind(real_tp) is None
+                                    or not _fits(w, plan, capacity)):
+                                continue
+                        if plan.n_persist == nc:
+                            if stage == 2:
+                                continue  # same "ddp" plan as the stage-3 pass
+                        elif stage == 3:
+                            # zero3 re-gathers unbuffered chunks in BWD, so
+                            # buffering is a real runtime knob again —
+                            # maximize it under capacity (memory monotone)
+                            n_buffer = _max_feasible(
+                                0, nc - plan.n_persist,
+                                lambda v, _p=plan.n_persist: _fits(
+                                    w, mk(n_persist=_p, n_buffer=v,
+                                          zero_stage=3), capacity))
+                            plan = mk(n_persist=plan.n_persist,
+                                      n_buffer=max(n_buffer, 0), zero_stage=3)
+                        rt = estimate_runtime(w, plan)
+                        mem = estimate_memory(w, plan)
+                        cand = SearchResult(plan, rt, mem, evaluated, 0.0, True)
+                        if best is None or rt.t_iteration < best.runtime.t_iteration:
+                            best = cand
                     continue
 
+                evaluated += 1
                 # smallest-footprint config in this cell
                 if not _fits(w, mk(), capacity):
                     if not allow_host:

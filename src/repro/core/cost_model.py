@@ -57,18 +57,30 @@ GRAD_WIRE_FACTOR = {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5}
 # the 0.5 fiction into the search. "manual" factors are payload-size ratios
 # vs the bf16 grads the uncompressed reduce moves; the topology cost of each
 # manual pipeline is modeled separately in t_reduce. "int8_ef_rs" is the
-# reduce-scatter pipeline for ZeRO-sharded chunks (manual_sync_kind="zero"):
-# same int8 payload ratio, but an all_to_all that moves (z-1)/z of the
-# compressed bytes instead of the gather's (z-1) — calibrated from the s8
-# collective bytes in the compiled HLO (benchmarks/calibrate_wire.py).
+# reduce-scatter pipeline for ZeRO-sharded chunks (manual_sync_kind zero2/
+# zero3): same int8 payload ratio, but an all_to_all that moves (z-1)/z of
+# the compressed bytes instead of the gather's (z-1) — calibrated from the
+# s8 collective bytes in the compiled HLO (benchmarks/calibrate_wire.py).
+# "gather_bf16" scales the *param* all-gathers of the manual ZeRO pipelines
+# (lazy per-chunk gathers + BWD re-gathers, priced by t_gather) — fitted
+# from the bf16 all-gather bytes of a zero3 program vs the modeled
+# (z-1)/z-per-chunk topology bytes.
 DEFAULT_WIRE_FACTORS = {
     "xla": {"none": 1.0, "bf16": 1.0, "int8_ef": 1.0},
-    "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5, "int8_ef_rs": 0.5},
+    "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5, "int8_ef_rs": 0.5,
+               "gather_bf16": 1.0},
 }
 
 # fp32 error-feedback residual per param = 2x the bf16 grad bytes; the
 # calibration JSON can override with the measured state-size delta.
 DEFAULT_EF_RESIDUAL_FACTOR = 2.0
+
+# Calibration JSON schema version this build writes/understands. The loader
+# is forward-compatible by construction: any factor key absent from a loaded
+# file (older schema, partial backend entry) falls back to the analytic
+# default above — wire_factor()/ef_residual_factor() never KeyError on old
+# calibrations, they just price the missing pipeline analytically.
+CALIBRATION_SCHEMA_VERSION = 2
 
 _CALIBRATION: dict | None = None
 _CALIBRATION_LOADED = False
@@ -77,9 +89,13 @@ _CALIBRATION_LOADED = False
 def load_wire_calibration(path: str | None = None) -> dict | None:
     """Load (and activate) a wire-cost calibration JSON.
 
-    Schema (written by benchmarks/calibrate_wire.py):
-      {"backends": {"<backend>": {"wire_factors": {"xla": {...}, "manual":
-      {...}}, "ef_residual_factor": float, ...}}}
+    Schema (written by benchmarks/calibrate_wire.py; versioned since v2):
+      {"version": 2, "backends": {"<backend>": {"wire_factors": {"xla":
+      {...}, "manual": {...}}, "ef_residual_factor": float, ...}}}
+    Files without a "version" key are treated as v1 (pre-gather-factor) and
+    load fine — every factor key a loaded entry lacks falls back to the
+    analytic DEFAULT_WIRE_FACTORS/DEFAULT_EF_RESIDUAL_FACTOR value at lookup
+    time, so an old-format JSON never KeyErrors the search.
     With ``path=None`` resolves ``$REPRO_WIRE_CALIBRATION``, then the packaged
     ``src/repro/core/wire_calibration.json``. Returns the active per-backend
     entry (matched against ``jax.default_backend()``, falling back to the
@@ -205,10 +221,18 @@ class Workload:
         return max(self.hw.matmul_time(flops), self.hw.hbm_time(chunk.param_bytes))
 
     # ---- per-chunk communication ------------------------------------------
-    def t_gather(self, chunk: ChunkInfo) -> float:
-        """All-gather of a ZeRO-sharded chunk's params (Eq. 4 gather term)."""
+    def t_gather(self, chunk: ChunkInfo, plan: MemoryPlan | None = None) -> float:
+        """All-gather of a ZeRO-sharded chunk's params (Eq. 4 gather term).
+
+        Under ``sync_mode="manual"`` the gathers are explicit bf16
+        collectives (the zero3 lazy per-chunk gathers and the zero2 up-front
+        gather), scaled by the calibrated ``gather_bf16`` factor — the
+        measured bf16 all-gather bytes of a compiled zero3 program over this
+        topology term (benchmarks/calibrate_wire.py)."""
         z = self.mesh.zero_degree
         nbytes = chunk.param_bytes / self.mesh.tp_degree
+        if plan is not None and plan.sync_mode == "manual":
+            nbytes *= wire_factor("manual", "gather_bf16")
         return nbytes * (z - 1) / z / self.mesh.gather_bw(self.hw)
 
     def t_upload(self, chunk: ChunkInfo, host_bw_eff: float) -> float:
@@ -430,6 +454,8 @@ def estimate_runtime(w: Workload, plan: MemoryPlan) -> RuntimeBreakdown:
     host_bw_eff, feasible = _host_bw_contention(w, plan)
     n = w.n_chunks
     chunks = w.chunks
+    manual_kind = (plan.manual_sync_kind(w.mesh.tp_degree)
+                   if plan.sync_mode == "manual" else None)
 
     # --- forward (Eq. 3): pipeline of compute vs next-chunk prefetch -------
     t_fwd = 0.0
@@ -440,7 +466,7 @@ def estimate_runtime(w: Workload, plan: MemoryPlan) -> RuntimeBreakdown:
             c = chunks[i]
             place = plan.chunk_placement(c.index)
             if place != "persist":
-                t_pref = w.t_gather(c)
+                t_pref = w.t_gather(c, plan)
                 if place == "host" and plan.host_params:
                     t_pref += w.t_upload(c, host_bw_eff)
         t_fwd += max(t_comp, t_pref)
@@ -461,12 +487,21 @@ def estimate_runtime(w: Workload, plan: MemoryPlan) -> RuntimeBreakdown:
         else:
             t_fetch = 0.0
         # re-gather of the *next* chunk to be visited (Eq. 7): only when its
-        # gathered weights were not buffered
+        # gathered weights were not buffered. Manual "zero2" gathers the whole
+        # tree up front and keeps it live for the step, so it never re-gathers
+        # regardless of n_buffer; "zero3" follows the xla path's buffering
+        # semantics for block chunks (that is the point of the lazy-gather
+        # refactor) while its non-block chunks (embed/head/encoder) are
+        # gathered at point of use outside any remat region and survive to
+        # BWD — no re-gather, like the xla path's fetch().
         t_pref = 0.0
         if idx + 1 < n:
             nxt = chunks[order[idx + 1]]
-            if plan.chunk_placement(nxt.index) != "persist" and not plan.chunk_buffered(nxt.index):
-                t_pref = w.t_gather(nxt)
+            buffered = (plan.chunk_buffered(nxt.index)
+                        or manual_kind == "zero2"
+                        or (manual_kind == "zero3" and not nxt.is_block))
+            if plan.chunk_placement(nxt.index) != "persist" and not buffered:
+                t_pref = w.t_gather(nxt, plan)
                 if plan.chunk_placement(nxt.index) == "host" and plan.host_params:
                     t_pref += w.t_upload(nxt, host_bw_eff)
         # reduce+offload of the previous chunk's grads (Eq. 6)
@@ -562,14 +597,28 @@ def estimate_memory(w: Workload, plan: MemoryPlan, ce_chunk: int = 2048) -> Memo
         states += 2 * max(c.grad_bytes for c in host_blocks) / (tp * z)
     manual_kind = (plan.manual_sync_kind(tp) if plan.sync_mode == "manual"
                    else None)
-    if manual_kind == "zero":
-        # manual ZeRO gathers every non-persistent chunk's bf16 params up
-        # front and keeps them live for the whole step (ZeRO-2-style layout:
-        # full bf16 params, shard-resident fp32 states/grads); buffered
-        # chunks were already charged above
+    if manual_kind == "zero2":
+        # manual ZeRO-2 gathers every non-persistent chunk's bf16 params up
+        # front and keeps them live for the whole step (full bf16 params,
+        # shard-resident fp32 states/grads); buffered chunks were already
+        # charged above. The "zero3" kind deliberately has NO such term —
+        # its lazy per-chunk gathers live only inside the scan, so it pays
+        # exactly the xla path's charges: buffered chunks (above) plus the
+        # two in-flight gather units (below).
         gathered += sum(
             c.param_bytes for c in w.chunks
             if plan.chunk_placement(c.index) != "persist"
+            and not plan.chunk_buffered(c.index)
+        ) / tp
+    elif manual_kind == "zero3":
+        # zero3's non-block chunks (embed/head/encoder) are gathered at
+        # point of use outside any remat region, so their gathered leaves
+        # survive FWD->BWD regardless of n_buffer — charge them resident
+        # (block chunks follow the xla-path buffering charges above)
+        gathered += sum(
+            c.param_bytes for c in w.chunks
+            if not c.is_block
+            and plan.chunk_placement(c.index) != "persist"
             and not plan.chunk_buffered(c.index)
         ) / tp
     # two in-flight gather buffers (prefetch + execute), the paper's n_buffer>=2
@@ -618,19 +667,29 @@ def estimate_memory(w: Workload, plan: MemoryPlan, ce_chunk: int = 2048) -> Memo
         import numpy as _np
 
         elems = leaf / _np.dtype(cfg.dtype).itemsize
-        if manual_kind == "zero":
-            # reduce-scatter workspace, any wire format: one microbatch's
-            # *full* local grad tree exists before the sync collapses it to
-            # shard size (the sharded chunks' persistent grads are only
-            # charged /z above). int8 additionally holds the all_to_all
-            # buffers of the largest leaf — int8 chunk payload (~1 B/elem) +
-            # the owner's fp32 dequantized shards (z shards of N/z elems at
-            # 4 B) ~ 5 B/elem.
+        a2a = elems * 5.0 if plan.grad_compress == "int8_ef" else 0.0
+        if manual_kind == "zero2":
+            # post-AD reduce-scatter workspace, any wire format: one
+            # microbatch's *full* local grad tree exists before the sync
+            # collapses it to shard size (the sharded chunks' persistent
+            # grads are only charged /z above). int8 additionally holds the
+            # all_to_all buffers of the largest leaf — int8 chunk payload
+            # (~1 B/elem) + the owner's fp32 dequantized shards (z shards of
+            # N/z elems at 4 B) ~ 5 B/elem.
             grads_full = sum(
                 c.grad_bytes for c in w.chunks
                 if plan.chunk_placement(c.index) != "persist") / tp
-            extra = elems * 5.0 if plan.grad_compress == "int8_ef" else 0.0
-            workspace = max(workspace, grads_full + extra)
+            workspace = max(workspace, grads_full + a2a)
+        elif manual_kind == "zero3":
+            # the lazy-gather VJP reduce-scatters each leaf's cotangent the
+            # moment AD produces it, so no full-grad-tree workspace exists —
+            # only the largest chunk's full cotangent is transiently live
+            # (plus the all_to_all buffers of its largest leaf).
+            chunk_grad = max(
+                (c.grad_bytes for c in w.chunks
+                 if plan.chunk_placement(c.index) != "persist"),
+                default=0) / tp
+            workspace = max(workspace, chunk_grad + a2a)
         elif plan.grad_compress == "int8_ef":
             # gather-based sync: the largest gradient leaf is all-gathered as
             # int8 (z x N x 1B) and dequantized to fp32 (z x N x 4B) before

@@ -73,6 +73,21 @@ A100_80G = HardwareSpec(
     host_flops=2.5e12,  # 112-core Platinum 8480+
 )
 
+# Local-host CPU calibration for the fidelity harness and example plan
+# summaries (benchmarks/estimator_fidelity.py, examples/train_lm.py): one
+# shared set of constants so the example's printed estimates and the CI
+# drift gate's predictions come from the same oracle.
+LOCAL_CPU_HW = HardwareSpec(
+    name="cpu-host",
+    peak_flops=5e10,
+    hbm_bytes=32e9,
+    hbm_bw=20e9,
+    ici_bw=10e9,
+    host_bw=10e9,
+    dcn_bw=1e9,
+    host_mem_bytes=32e9,
+)
+
 HARDWARE = {h.name: h for h in (TPU_V5E, RTX_3090, A100_80G)}
 
 

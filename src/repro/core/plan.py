@@ -80,6 +80,16 @@ class MemoryPlan:
     #              all-gather); ZeRO-sharded layouts reduce-scatter the
     #              compressed payload to shard owners; see manual_sync_kind().
     sync_mode: str = "xla"
+    # manual-sync ZeRO dataflow for sharded plans (ignored otherwise):
+    #   3 — lazy per-chunk gather: each chunk's bf16 params are all-gathered
+    #       just-in-time inside the layer scan through a custom-vjp gather
+    #       whose transpose IS the compressed reduce-scatter, so full params
+    #       never coexist and n_buffer keeps its xla-path meaning (buffered
+    #       chunks hold gathered weights FWD->BWD, unbuffered ones re-gather
+    #       in BWD);
+    #   2 — legacy up-front gather: full bf16 params live for the whole step
+    #       (ZeRO-2-style memory), no re-gathers.
+    zero_stage: int = 3
 
     def __post_init__(self):
         assert 0 <= self.n_persist <= self.n_chunks
@@ -89,24 +99,31 @@ class MemoryPlan:
         assert self.microbatch >= 1
         assert self.grad_compress in ("none", "bf16", "int8_ef"), self.grad_compress
         assert self.sync_mode in ("xla", "manual"), self.sync_mode
+        assert self.zero_stage in (2, 3), self.zero_stage
 
     # ---- manual gradient sync eligibility ---------------------------------
     def manual_sync_kind(self, tp_degree: int = 1) -> str | None:
         """Which manual shard_map sync pipeline this plan lowers to, if any.
 
         Returns:
-          * ``"ddp"``  — fully-replicated layout: the body computes per-device
+          * ``"ddp"``   — fully-replicated layout: the body computes per-device
             gradients with replicated parameter specs and syncs them with a
             compressed all-gather over the batch axes (DDP-style).
-          * ``"zero"`` — ZeRO-sharded layout (some chunks non-persistent): the
-            body gathers the bf16 param shards up front (ZeRO-2-style: full
-            bf16 params live for the step, fp32 optimizer states and the
-            synced gradient stay shard-resident), then reduce-scatters the
-            compressed local gradients so each device owns its shard's
-            reduced gradient and updates it in place.
-          * ``None``   — cannot lower manually; ``sync_mode="manual"`` raises.
+          * ``"zero2"`` — ZeRO-sharded layout, ``zero_stage=2``: the body
+            gathers the bf16 param shards up front (full bf16 params live for
+            the step, fp32 optimizer states and the synced gradient stay
+            shard-resident), then reduce-scatters the compressed local
+            gradients so each device owns its shard's reduced gradient and
+            updates it in place.
+          * ``"zero3"`` — ZeRO-sharded layout, ``zero_stage=3`` (default):
+            same shard-resident state and compressed reduce-scatter, but each
+            chunk's bf16 params are gathered lazily inside the layer scan via
+            a custom-vjp all-gather whose transpose is the reduce-scatter —
+            full params never coexist, restoring true ZeRO-3 param memory;
+            ``n_buffer`` decides which chunks keep gathered weights FWD->BWD.
+          * ``None``    — cannot lower manually; ``sync_mode="manual"`` raises.
 
-        Shared requirements (both kinds):
+        Shared requirements (all kinds):
 
           * no activation swapping (host-offload remat policies reference
             memory kinds that cannot be named inside a shard_map body);
@@ -117,12 +134,12 @@ class MemoryPlan:
           * "ddp" additionally needs replicated fp32 optimizer states (no
             zero1_persistent) and tp_degree == 1 unless dp_only repurposes
             the model axis as a batch axis;
-          * "zero" needs tp_degree == 1 outright (with a real model axis the
-            ZeRO shard axes and the batch/sync axes differ — dp_only shards
-            the batch over the model axis too, but parameters still shard
-            over the ZeRO axes only, so the reduce-scatter owner coordinate
-            would not match the storage layout) and no zero1_persistent
-            (persistent chunks keep replicated updates in the zero body).
+          * "zero2"/"zero3" need tp_degree == 1 outright (with a real model
+            axis the ZeRO shard axes and the batch/sync axes differ — dp_only
+            shards the batch over the model axis too, but parameters still
+            shard over the ZeRO axes only, so the reduce-scatter owner
+            coordinate would not match the storage layout) and no
+            zero1_persistent (persistent chunks keep replicated updates).
 
         Ineligible plans keep ``sync_mode="xla"`` semantics; the autotuner
         only proposes "manual" for plans with a non-None kind.
@@ -131,7 +148,9 @@ class MemoryPlan:
             return None
         if self.n_persist == self.n_chunks:
             return "ddp" if (tp_degree == 1 or self.dp_only) else None
-        return "zero" if tp_degree == 1 else None
+        if tp_degree != 1:
+            return None
+        return "zero3" if self.zero_stage == 3 else "zero2"
 
     def manual_sync_ok(self, tp_degree: int = 1) -> bool:
         """True when the plan lowers manually at all (any kind)."""
@@ -167,6 +186,8 @@ class MemoryPlan:
         comp = "" if self.grad_compress == "none" else f" comm={self.grad_compress}"
         if self.sync_mode != "xla":
             comp += f" sync={self.sync_mode}"
+            if self.n_persist < self.n_chunks:
+                comp += f" zstage={self.zero_stage}"
         return (
             f"persist={self.n_persist}/{self.n_chunks} buffer={self.n_buffer} "
             f"host={self.n_host} swap={self.n_swap} ckpt={self.n_checkpoint} "

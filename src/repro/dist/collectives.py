@@ -44,6 +44,12 @@ diagram in docs/architecture.md):
     Real wire bytes drop by the quantization ratio; each device carries its
     own residual.
 
+    ``gather_param_lazy`` completes the ZeRO-3 picture: a custom-vjp bf16
+    param all-gather whose transpose runs the compressed reduce-scatter, so
+    the manual zero3 path gathers each chunk just-in-time inside the layer
+    scan and receives shard-sized gradients (and fresh EF residuals)
+    straight out of AD — no up-front gather, no full-grad workspace.
+
 Everything outside a shard_map body is guarded on mesh size so 1-device
 meshes (and the CPU test meshes) take the local math path; the manual
 entry points are only ever called inside a shard_map body the step builder
@@ -52,6 +58,7 @@ guards the same way.
 from __future__ import annotations
 
 import math
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -255,6 +262,60 @@ def manual_int8_ef_reduce_scatter(
     sr = jax.lax.all_to_all(scale, _names(axis_names), 0, 0)  # (z,) fp32 scales
     deq = qr.astype(jnp.float32) * sr.reshape((z,) + (1,) * (qr.ndim - 1))
     return jnp.mean(deq, axis=0).astype(x.dtype), new_err.astype(err.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Lazy per-chunk param gather (manual ZeRO-3; called INSIDE a shard_map body)
+# ---------------------------------------------------------------------------
+def _tiled_all_gather(x: jax.Array, axis_names, dim: int) -> jax.Array:
+    return jax.lax.all_gather(x, _names(axis_names), axis=dim, tiled=True)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _gather_param_lazy(axis_names, dim, compress, w, err):
+    return _tiled_all_gather(w, axis_names, dim)
+
+
+def _gather_param_lazy_fwd(axis_names, dim, compress, w, err):
+    return _tiled_all_gather(w, axis_names, dim), err
+
+
+def _gather_param_lazy_bwd(axis_names, dim, compress, err, ct):
+    if compress == "int8_ef":
+        g_shard, new_err = manual_int8_ef_reduce_scatter(ct, err, axis_names, dim)
+        return g_shard, new_err
+    rs = manual_bf16_reduce_scatter if compress == "bf16" else manual_reduce_scatter
+    return rs(ct, axis_names, dim), err
+
+
+_gather_param_lazy.defvjp(_gather_param_lazy_fwd, _gather_param_lazy_bwd)
+
+
+def gather_param_lazy(w: jax.Array, err, axis_names, dim: int,
+                      compress: str = "int8_ef") -> jax.Array:
+    """Just-in-time bf16 param all-gather whose transpose is the compressed
+    reduce-scatter (the manual ZeRO-3 dataflow; see train/sync.py).
+
+    Forward: tiled all-gather of this device's param shard along ``dim`` over
+    the sync axes — the full leaf exists only at its point of use (inside the
+    layer scan, so chunks are gathered one at a time; whether the gathered
+    value survives to BWD or is re-gathered is the caller's remat policy —
+    the plan's ``n_buffer``).
+
+    Backward: the incoming cotangent is this device's *local full* gradient
+    for the leaf; instead of materializing it into a workspace and syncing
+    later, the VJP rule runs ``manual_int8_ef_reduce_scatter`` directly —
+    each device receives only its owned grad shard straight out of AD, with
+    the int8 payload on the wire.
+
+    Error feedback threads through the VJP: ``err`` (shard-sized fp32, or
+    None for bf16/none wire formats) is unused in the forward, and its
+    "cotangent" is defined to be the *new* residual the reduce-scatter
+    produces — so ``jax.grad`` w.r.t. ``(w, err)`` yields
+    ``(grad_shard, new_err)`` and the caller carries the residual as explicit
+    state keyed by chunk.
+    """
+    return _gather_param_lazy(tuple(_names(axis_names)), int(dim), compress, w, err)
 
 
 # Tree-level dispatch (replicated vs ZeRO-sharded leaves) lives in

@@ -114,8 +114,17 @@ def parse_collectives(hlo: str) -> list[CollectiveOp]:
         cur = order.pop(0)
         text = comps.get(cur, "")
         m_cur = mult.get(cur, 1.0)
-        for m in re.finditer(r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", text):
-            cond, body = m.groups()
+        # while operands are usually tuple-typed — `while((s32[], ...) %t)` —
+        # so the condition/body attributes are matched per line rather than
+        # through the (nested-paren) operand list
+        for line in text.splitlines():
+            if not re.search(r"\bwhile\(", line):
+                continue
+            mc = re.search(r"condition=%?([\w.\-]+)", line)
+            mb = re.search(r"body=%?([\w.\-]+)", line)
+            if not (mc and mb):
+                continue
+            cond, body = mc.group(1), mb.group(1)
             tc = _trip_count(comps.get(cond, ""))
             mult[body] = mult.get(body, 0.0) + m_cur * tc
             if body not in seen:

@@ -218,6 +218,8 @@ def apply_superblock(
     cfg: ModelConfig,
     gather_specs=None,
     remat_policy=None,
+    lazy_gather=None,
+    ef=None,
     **kw,
 ):
     """block_params: {posJ: params-for-one-repeat}. Returns (x, aux).
@@ -226,12 +228,23 @@ def apply_superblock(
     (per transformer layer) — the paper's per-block activation management
     granularity. The gather is inside the rematted region, so gathered-weight
     save/offload follows the same policy (n_buffer semantics).
+
+    ``lazy_gather``: manual-sync (shard_map) replacement for the
+    device_put-based ``gather_weights``: a hook ``(per-position params,
+    per-position EF subtree, position j) -> gathered params`` built on
+    ``dist.collectives.gather_param_lazy``, whose VJP reduce-scatters the
+    gradient to shard owners. ``ef`` is the error-feedback residual subtree
+    threaded to the hook (sliced alongside the params by the run scan).
     """
     aux = jnp.zeros((), jnp.float32)
 
     def one(j, x):
-        specs = None if gather_specs is None else gather_specs[f"pos{j}"]
-        pp = gather_weights(block_params[f"pos{j}"], specs)
+        if lazy_gather is not None:
+            pp = lazy_gather(block_params[f"pos{j}"],
+                             None if ef is None else ef[f"pos{j}"], j)
+        else:
+            specs = None if gather_specs is None else gather_specs[f"pos{j}"]
+            pp = gather_weights(block_params[f"pos{j}"], specs)
         return apply_position(pp, x, cfg, j, **kw)
 
     for j in range(superblock_period(cfg)):
@@ -241,17 +254,60 @@ def apply_superblock(
     return x, aux
 
 
-REMAT_POLICIES: dict[tuple[str, bool], Any] = {}
+REMAT_POLICIES: dict[tuple[str, bool, bool], Any] = {}
 
 
-def _remat_policy(act_policy: str, buffered: bool):
-    """Map (activation policy, weights-buffered?) to a jax.checkpoint policy."""
-    key = (act_policy, buffered)
+def _is_lazy_gather_eqn(prim, params) -> bool:
+    """Recognize the ``dist.collectives.gather_param_lazy`` custom_vjp call:
+    a custom-vjp whose forward jaxpr is (only) a tiled all-gather."""
+    if prim.name not in ("custom_vjp_call_jaxpr", "custom_vjp_call"):
+        return False
+    fj = params.get("fun_jaxpr") or params.get("call_jaxpr")
+    eqns = getattr(getattr(fj, "jaxpr", fj), "eqns", [])
+    return 0 < len(eqns) <= 2 and any(
+        e.primitive.name == "all_gather" for e in eqns)
+
+
+def _save_acts_not_lazy_gathers():
+    """save_anything_except_these_names(GATHERED_W), plus: never save the
+    *raw* all-gather output feeding the name. Without the second clause the
+    name exclusion is defeated — the named value is an identity of the
+    unnamed gather output, so partial-eval happily saves the unnamed ancestor
+    and the "re-gather in BWD" semantics silently becomes "buffered". By the
+    time the policy runs the gather custom_vjp has been inlined, so the
+    exclusion matches the ``all_gather`` primitive itself (the only
+    all-gathers inside a lazy run's remat region are the lazy weight
+    gathers; activation sharding is identity under manual sync) — with the
+    custom_vjp-eqn matcher kept for jax versions that keep the call
+    un-inlined."""
+    base = jax.checkpoint_policies.save_anything_except_these_names(GATHERED_W)
+
+    def policy(prim, *avals, **params):
+        if prim.name == "all_gather" or _is_lazy_gather_eqn(prim, params):
+            return False
+        return base(prim, *avals, **params)
+
+    return policy
+
+
+def _remat_policy(act_policy: str, buffered: bool, lazy: bool = False):
+    """Map (activation policy, weights-buffered?) to a jax.checkpoint policy.
+
+    ``lazy``: the run gathers weights through ``gather_param_lazy`` (manual
+    ZeRO-3) — the unbuffered keep-activations policy must then also exclude
+    the gather custom_vjp's raw output from saving (see
+    ``_save_acts_not_lazy_gathers``)."""
+    key = (act_policy, buffered, lazy)
     if key in REMAT_POLICIES:
         return REMAT_POLICIES[key]
     cp = jax.checkpoint_policies
     if act_policy == "none":
-        pol = cp.everything_saveable if buffered else cp.save_anything_except_these_names(GATHERED_W)
+        if buffered:
+            pol = cp.everything_saveable
+        elif lazy:
+            pol = _save_acts_not_lazy_gathers()
+        else:
+            pol = cp.save_anything_except_these_names(GATHERED_W)
     elif act_policy == "checkpoint":
         pol = cp.save_only_these_names(GATHERED_W) if buffered else cp.nothing_saveable
     elif act_policy == "swap":
@@ -278,6 +334,11 @@ class Run:
     persistent: bool = False  # params replicated over zero axes (no gather)
     gather_specs: Any = None  # per-repeat pytree of NamedSharding (ZeRO dropped)
     ckpt_group: int = 1  # remat region size in superblock repeats (sqrt(n) trade)
+    # manual ZeRO-3 lazy gather: hook (per-repeat params, per-repeat ef) ->
+    # gathered params, plus the stacked EF residual tree scanned alongside the
+    # params so the gather VJP's new residuals come out stacked per repeat
+    lazy_gather: Any = None
+    ef: Any = None
 
 
 def apply_runs(
@@ -293,10 +354,11 @@ def apply_runs(
 
     for run in runs:
         # per-position (per-layer) remat policy; None = save everything
+        lazy = run.lazy_gather is not None
         pol = (
             None
             if run.act_policy == "none" and run.buffered
-            else _remat_policy(run.act_policy, run.buffered)
+            else _remat_policy(run.act_policy, run.buffered, lazy)
         )
         g = run.ckpt_group if run.act_policy == "checkpoint" else 1
         g = max(1, min(g, run.n_repeats))
@@ -304,46 +366,53 @@ def apply_runs(
             g -= 1  # group must tile the run
 
         if g == 1:
-            def body(carry, bp, _run=run, _pol=pol):
+            def body(carry, sl, _run=run, _pol=pol):
                 x, aux = carry
+                bp, ef = sl
                 x, a = apply_superblock(
                     bp, x, cfg, gather_specs=_run.gather_specs, remat_policy=_pol,
+                    lazy_gather=_run.lazy_gather, ef=ef,
                     memory=memory, attn_impl=attn_impl,
                 )
                 return (x, aux + a), None
 
-            scan_params = run.params
+            scan_xs = (run.params, run.ef)
         else:
             # grouped remat: one checkpoint region spans g superblocks, so the
             # scan saves one boundary per g layers (recompute working set: g)
-            def region(carry, gp, _run=run):
+            def region(carry, gsl, _run=run, _g=g):
                 x, aux = carry
-                for i in range(_run.ckpt_group):
+                gp, gef = gsl
+                for i in range(_g):
                     bp = jax.tree.map(lambda a, _i=i: a[_i], gp)
+                    ef_i = (None if gef is None
+                            else jax.tree.map(lambda a, _i=i: a[_i], gef))
                     x, a = apply_superblock(
                         bp, x, cfg, gather_specs=_run.gather_specs,
-                        remat_policy=None, memory=memory, attn_impl=attn_impl,
+                        remat_policy=None, lazy_gather=_run.lazy_gather,
+                        ef=ef_i, memory=memory, attn_impl=attn_impl,
                     )
                     aux = aux + a
                 return (x, aux)
 
-            region_ck = jax.checkpoint(region, policy=_remat_policy(run.act_policy, run.buffered))
+            region_ck = jax.checkpoint(
+                region, policy=_remat_policy(run.act_policy, run.buffered, lazy))
 
-            def body(carry, gp, _f=region_ck):
-                return _f(carry, gp), None
+            def body(carry, gsl, _f=region_ck):
+                return _f(carry, gsl), None
 
-            scan_params = jax.tree.map(
+            scan_xs = jax.tree.map(
                 lambda a, _g=g: a.reshape(a.shape[0] // _g, _g, *a.shape[1:]),
-                run.params,
+                (run.params, run.ef),
             )
 
         n_iters = run.n_repeats // g
         if n_iters == 1:
             (x, aux_total), _ = body(
-                (x, aux_total), jax.tree.map(lambda a: a[0], scan_params)
+                (x, aux_total), jax.tree.map(lambda a: a[0], scan_xs)
             )
         else:
-            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), scan_params)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), scan_xs)
     return x, aux_total
 
 

@@ -26,10 +26,12 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.plan import MemoryPlan
+from repro.dist import collectives as COLL
 from repro.dist import sharding as SH
 from repro.models import kvcache as KV
 from repro.models import model as M
@@ -359,6 +361,86 @@ def build_train_step(
 
     loss_fn = make_loss_fn(sharder, w_acc_sharding)
 
+    def make_lazy_loss_fn(strategy):
+        """Manual "zero3" loss closure: per-chunk lazy gather hooks instead
+        of a pre-gathered param tree. Sharded leaves route through
+        ``dist.collectives.gather_param_lazy`` — run (block) leaves inside
+        the layer scan (one chunk's full weights at a time, remat policy
+        deciding FWD->BWD buffering per the plan's ``n_buffer``), non-run
+        groups (embed / head / encoder — each its own chunk) at their point
+        of use. The EF residual tree rides along as a loss *input* whose
+        "gradient" is the new residual (see gather_param_lazy)."""
+        axes, compress = strategy.axes, plan.grad_compress
+        leafs_tree = SYNC.leaf_sync_tree(state_specs["params"], axes)
+        _is_ls = lambda x: isinstance(x, SYNC.LeafSync)  # noqa: E731
+
+        def per_repeat_ls(ls_tree):
+            # stacked run leaves carry the LAYER axis first; the scan slices
+            # it off, so the per-repeat shard dim is the stacked dim - 1
+            return jax.tree.map(
+                lambda ls: SYNC.LeafSync(None if ls.dim is None else ls.dim - 1),
+                ls_tree, is_leaf=_is_ls)
+
+        def subtree_gather(pp, epp, ls_sub, name=False):
+            flat_w, td = jax.tree.flatten(pp)
+            flat_ls = td.flatten_up_to(ls_sub)
+            flat_e = (td.flatten_up_to(epp) if epp is not None
+                      else [None] * len(flat_w))
+            out = []
+            for w, ls, e in zip(flat_w, flat_ls, flat_e):
+                if ls.dim is None:
+                    out.append(w)
+                    continue
+                g = COLL.gather_param_lazy(w, e, axes, ls.dim, compress)
+                out.append(checkpoint_name(g, M.GATHERED_W) if name else g)
+            return td.unflatten(out)
+
+        def make_zero3_runs(params, ef):
+            out = []
+            for i, r in enumerate(runs_layout):
+                if r.placement == "persist":
+                    out.append(M.Run(
+                        params=params["runs"][i], n_repeats=r.length,
+                        act_policy=r.act_policy, buffered=True,
+                        persistent=True, gather_specs=None,
+                        ckpt_group=plan.ckpt_group))
+                    continue
+                ls_rep = per_repeat_ls(leafs_tree["runs"][i])
+                out.append(M.Run(
+                    params=params["runs"][i], n_repeats=r.length,
+                    act_policy=r.act_policy, buffered=r.buffered,
+                    persistent=False, gather_specs=None,
+                    ckpt_group=plan.ckpt_group,
+                    lazy_gather=lambda pp, epp, j, _ls=ls_rep: subtree_gather(
+                        pp, epp, _ls[f"pos{j}"], name=True),
+                    ef=None if ef is None else ef["runs"][i],
+                ))
+            return out
+
+        def lazy_loss(params, ef, batch):
+            M.set_activation_sharder(lambda x, kind="bsd": x)
+            fparams = dict(params)
+            for key in ("embed", "final_norm", "head", "encoder"):
+                if key in fparams:
+                    fparams[key] = subtree_gather(
+                        fparams[key], None if ef is None else ef[key],
+                        leafs_tree[key])
+            h, aux = M.forward(
+                fparams, batch, cfg, runs=make_zero3_runs(params, ef),
+                attn_impl=attn_impl, encoder_gather_specs=None,
+            )
+            from repro.models.layers import apply_norm
+
+            h = M.shard_act(h, "enter")
+            h = apply_norm(fparams["final_norm"], h, cfg.norm)
+            w = fparams["embed"]["tok"].T if cfg.tie_embeddings else fparams["head"]["w"]
+            loss = chunked_cross_entropy(
+                h, w, batch["labels"], ce_chunk=ce_chunk, w_acc_sharding=None
+            )
+            return loss + aux.astype(jnp.float32), loss
+
+        return lazy_loss
+
     # gradient shardings: same partitioning as params, but always in device
     # memory (host-chunk grads are reduce-scattered on device, then the
     # optimizer round-trips the states). Without this constraint the transpose
@@ -410,6 +492,8 @@ def build_train_step(
     if strategy.manual_active:
         step_fn = strategy.build_step_fn(
             loss=make_loss_fn(lambda x, kind="bsd": x, None, full=True),
+            lazy_loss=(make_lazy_loss_fn(strategy)
+                       if strategy.kind == "zero3" else None),
             apply_update=apply_update,
             state_specs=state_specs,
             batch_specs=batch_specs,
@@ -418,9 +502,14 @@ def build_train_step(
         )
     else:
         def step_fn(state, batch):
+            def micro_grad(mb_batch, ef_c):
+                (total, ce), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"], mb_batch)
+                return g, total, ce, ef_c
+
             grads, total, ce, _ = SYNC.accumulate_grads(
-                loss_fn, state["params"], batch, plan.microbatch,
-                pin_grads, None, None)
+                micro_grad, batch, plan.microbatch, None, state["params"],
+                pin=pin_grads)
             grads, new_ef, metrics = strategy.finalize_grads(
                 grads, state.get("ef"), pin_grads, g_shard)
             return apply_update(state, grads, total, ce, new_ef, metrics,

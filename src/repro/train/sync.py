@@ -28,11 +28,18 @@ step bodies; this module owns it instead. A strategy object encapsulates one
         fp32 optimizer state in place. EF is *shard*-sized, laid out exactly
         like the gradient shard it corrects.
 
-    ZeRO ("zero"-kind) plans gather the bf16 param shards up front
-    (ZeRO-2-style: full bf16 params live for the step; fp32 master/m/v and
-    the synced grad stay shard-resident), run fwd/bwd against the gathered
-    tree, and the per-microbatch sync immediately collapses gradients back
-    to shard size — the accumulation carry is shard-sized.
+    ZeRO-sharded plans come in two dataflows (``MemoryPlan.zero_stage``):
+    "zero2" gathers the bf16 param shards up front (full bf16 params live
+    for the step; fp32 master/m/v and the synced grad stay shard-resident)
+    and reduce-scatters gradients post-AD; "zero3" (default) gathers each
+    chunk just-in-time inside the layer scan through
+    ``dist.collectives.gather_param_lazy`` — a custom-vjp all-gather whose
+    transpose *is* the compressed reduce-scatter, so sharded leaves' grads
+    (and their new EF residuals) arrive shard-sized straight out of AD, full
+    params never coexist, and ``n_buffer`` regains its xla-path meaning
+    (buffered chunks keep gathered weights FWD->BWD, unbuffered ones
+    re-gather in BWD). In every kind the per-microbatch sync collapses
+    gradients to shard size before accumulation — the carry is shard-sized.
 
 Dataflow diagrams and eligibility rules: docs/architecture.md §2.
 """
@@ -56,26 +63,25 @@ _is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)  # noqa: E731
 
 
 # ---------------------------------------------------------------------------
-# Shared accumulate skeleton (both sync paths, both manual kinds)
+# Shared accumulate skeleton (both sync paths, all manual kinds)
 # ---------------------------------------------------------------------------
-def accumulate_grads(loss, params, batch, microbatch, pin, sync_each, ef,
-                     acc_like=None):
+def accumulate_grads(micro_grad, batch, microbatch, ef, acc_like, pin=None):
     """Microbatch gradient accumulation, shared by every sync strategy.
 
-    ``pin`` re-asserts gradient shardings (identity inside shard_map);
-    ``sync_each`` (manual path) syncs every microbatch's grads, threading the
-    EF residual ``ef`` through the scan so each wire transmission feeds back
-    into the next. ``acc_like`` shapes the accumulation carry — it defaults
-    to ``params`` but the manual ZeRO path passes the *local* state params
-    (shard-sized leaves), because ``sync_each`` reduce-scatters each
-    microbatch's full local grads down to shard size before they are
-    accumulated. Returns ``(grads, total, ce, ef)``."""
+    ``micro_grad(mb_batch, ef) -> (grads, total, ce, ef)`` computes one
+    microbatch's gradients — already synced for the manual strategies (the
+    "zero3" kind reduce-scatters them *inside* AD via the lazy-gather VJP) —
+    threading the EF residual so each wire transmission feeds its
+    quantization error back into the next. ``acc_like`` shapes the
+    accumulation carry: the manual ZeRO kinds pass the *local* state params
+    (shard-sized leaves), because each microbatch's grads collapse to shard
+    size before they are accumulated. ``pin`` re-asserts gradient shardings
+    on the carry (omitted inside shard_map). Returns
+    ``(grads, total, ce, ef)``."""
+    pin = pin if pin is not None else (lambda g: g)
     if microbatch == 1:
-        (total, ce), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
-        grads = pin(grads)
-        if sync_each is not None:
-            grads, ef = sync_each(grads, ef)
-        return grads, total, ce, ef
+        grads, total, ce, ef = micro_grad(batch, ef)
+        return pin(grads), total, ce, ef
 
     def split(x):
         return x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:])
@@ -84,15 +90,12 @@ def accumulate_grads(loss, params, batch, microbatch, pin, sync_each, ef,
 
     def acc_body(carry, mb_batch):
         g_acc, l_acc, ef_c = carry
-        (tot, _ce), g = jax.value_and_grad(loss, has_aux=True)(params, mb_batch)
+        g, tot, _ce, ef_c = micro_grad(mb_batch, ef_c)
         g = pin(g)
-        if sync_each is not None:
-            g, ef_c = sync_each(g, ef_c)
         g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
         return (g_acc, l_acc + tot, ef_c), None
 
-    like = acc_like if acc_like is not None else params
-    zeros = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), like))
+    zeros = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), acc_like))
     (grads, total, ef), _ = jax.lax.scan(
         acc_body, (zeros, jnp.zeros((), jnp.float32), ef), micro)
     grads = pin(jax.tree.map(lambda g: g / microbatch, grads))
@@ -213,10 +216,24 @@ class XlaSync:
 class ManualSync:
     """The whole step body under shard_map; dist/collectives own the wire.
 
-    ``kind`` is ``MemoryPlan.manual_sync_kind``'s verdict ("ddp" | "zero");
-    the per-leaf descriptors make the two kinds one code path — a "ddp" plan
-    simply has no sharded leaves, so its gather is the identity and every
-    leaf takes the all-gather sync.
+    ``kind`` is ``MemoryPlan.manual_sync_kind``'s verdict ("ddp" | "zero2" |
+    "zero3"); the per-leaf descriptors make the kinds one code path — a "ddp"
+    plan simply has no sharded leaves, so its gather is the identity and
+    every leaf takes the all-gather sync. The two ZeRO kinds differ only in
+    *when* params are gathered:
+
+      * "zero2" all-gathers every sharded bf16 leaf up front and keeps the
+        full tree live for the step; gradients reduce-scatter post-AD
+        (``manual_tree_sync``).
+      * "zero3" never materializes the full tree: the loss closure (built by
+        step_builder.make_lazy_loss_fn) gathers each chunk just-in-time
+        inside the layer scan via ``dist.collectives.gather_param_lazy``,
+        whose VJP *is* the compressed reduce-scatter — sharded leaves' grads
+        arrive shard-sized straight out of AD, and the new EF residuals come
+        out as the "gradient" w.r.t. the residual inputs. Only replicated
+        leaves still sync post-AD (DDP-style). ``n_buffer`` keeps its
+        xla-path meaning: buffered chunks save gathered weights FWD->BWD,
+        unbuffered ones re-gather in BWD through the remat policy.
     """
 
     manual_active = True
@@ -226,10 +243,11 @@ class ManualSync:
         self.mesh = mesh
         self.kind = kind
         self.compress = plan.grad_compress
-        # "zero" syncs over the ZeRO (param-shard) axes so the reduce-scatter
-        # owner coordinate matches the storage layout; eligibility pins
-        # tp_degree == 1, making them the full batch extent either way.
-        self.axes = (SH.zero_axes(mesh) if kind == "zero"
+        # ZeRO kinds sync over the ZeRO (param-shard) axes so the
+        # reduce-scatter owner coordinate matches the storage layout;
+        # eligibility pins tp_degree == 1, making them the full batch extent
+        # either way.
+        self.axes = (SH.zero_axes(mesh) if kind in ("zero2", "zero3")
                      else SH.manual_sync_axes(mesh, plan.dp_only))
         sizes = SH.mesh_sizes(mesh)
         self.n_sync = math.prod(sizes[a] for a in self.axes)
@@ -259,12 +277,14 @@ class ManualSync:
 
     # -- step construction ---------------------------------------------------
     def build_step_fn(self, *, loss, apply_update, state_specs, batch_specs,
-                      global_batch: int, microbatch: int):
+                      global_batch: int, microbatch: int, lazy_loss=None):
         """Assemble the shard_map'd step. ``loss`` must be the manual-mode
         loss closure (identity activation sharder, fully-gathered params —
-        see step_builder.make_loss_fn); ``apply_update`` is the shared
-        optimizer/assembly tail."""
-        axes, n_sync, compress = self.axes, self.n_sync, self.compress
+        see step_builder.make_loss_fn); for the "zero3" kind ``lazy_loss`` is
+        the per-chunk-gather closure ``(params, ef, batch) -> (total, ce)``
+        (step_builder.make_lazy_loss_fn) and ``loss`` is unused.
+        ``apply_update`` is the shared optimizer/assembly tail."""
+        axes, n_sync, compress, kind = self.axes, self.n_sync, self.compress, self.kind
         local_b = global_batch // max(n_sync, 1)
         if global_batch % n_sync or (microbatch > 1 and local_b % microbatch):
             raise ValueError(
@@ -273,13 +293,16 @@ class ManualSync:
                 f"by sync extent {n_sync} (and the local batch {local_b} by "
                 f"microbatch={microbatch})"
             )
+        if kind == "zero3" and lazy_loss is None:
+            raise ValueError("manual 'zero3' sync needs the lazy-gather loss "
+                             "closure (step_builder.make_lazy_loss_fn)")
         leafs = leaf_sync_tree(state_specs["params"], axes)
         has_sharded = any(ls.dim is not None for ls in jax.tree.leaves(
             leafs, is_leaf=lambda x: isinstance(x, LeafSync)))
 
         def gather_full(params):
-            """all-gather ZeRO-sharded bf16 param shards to full leaves
-            (identity for "ddp" plans: no sharded leaves)."""
+            """Up-front all-gather of ZeRO-sharded bf16 param shards to full
+            leaves ("zero2"; identity for "ddp" plans: no sharded leaves)."""
 
             def one(w, ls: LeafSync):
                 if ls.dim is None:
@@ -288,8 +311,16 @@ class ManualSync:
 
             return jax.tree.map(one, params, leafs)
 
-        def sync_each(grads, ef):
-            return manual_tree_sync(grads, ef, axes, compress, leafs)
+        def replicated_sync(g, ee, eg, ls):
+            """Post-AD sync of one replicated leaf; sharded leaves were
+            already reduce-scattered inside AD (zero3), whose new residual is
+            ``eg`` — the loss's "gradient" w.r.t. the residual input."""
+            if ls.dim is not None:
+                return g, eg
+            if compress == "int8_ef":
+                return COLL.manual_int8_ef_sync(g, ee, axes)
+            sync = COLL.manual_bf16_mean if compress == "bf16" else COLL.manual_mean
+            return sync(g, axes), ee
 
         def split_ef(ef):
             """Global EF view -> this device's local residuals (stacked
@@ -322,10 +353,40 @@ class ManualSync:
 
         def body(state, batch):
             ef = split_ef(state["ef"]) if compress == "int8_ef" else None
-            full_params = gather_full(state["params"])
+            if kind == "zero3":
+                # per-chunk lazy gather: sharded leaves' grads (and new EF
+                # residuals) come out of AD already reduce-scattered; only
+                # replicated leaves need the post-AD DDP-style sync
+                def micro_grad(mb_batch, ef_c):
+                    if compress == "int8_ef":
+                        (tot, ce), (g, ef_g) = jax.value_and_grad(
+                            lazy_loss, argnums=(0, 1), has_aux=True)(
+                                state["params"], ef_c, mb_batch)
+                        flat_g, td = jax.tree.flatten(g)
+                        outs = [replicated_sync(gg, ee, eg, ls)
+                                for gg, ee, eg, ls in zip(
+                                    flat_g, td.flatten_up_to(ef_c),
+                                    td.flatten_up_to(ef_g),
+                                    td.flatten_up_to(leafs))]
+                        return (td.unflatten([o[0] for o in outs]), tot, ce,
+                                td.unflatten([o[1] for o in outs]))
+                    (tot, ce), g = jax.value_and_grad(
+                        lazy_loss, has_aux=True)(state["params"], None, mb_batch)
+                    flat_g, td = jax.tree.flatten(g)
+                    synced = [replicated_sync(gg, None, None, ls)[0]
+                              for gg, ls in zip(flat_g, td.flatten_up_to(leafs))]
+                    return td.unflatten(synced), tot, ce, ef_c
+            else:
+                full_params = gather_full(state["params"])
+
+                def micro_grad(mb_batch, ef_c):
+                    (tot, ce), g = jax.value_and_grad(
+                        loss, has_aux=True)(full_params, mb_batch)
+                    g, ef_c = manual_tree_sync(g, ef_c, axes, compress, leafs)
+                    return g, tot, ce, ef_c
+
             grads, total, ce, ef = accumulate_grads(
-                loss, full_params, batch, microbatch, lambda g: g, sync_each,
-                ef, acc_like=state["params"])
+                micro_grad, batch, microbatch, ef, acc_like=state["params"])
 
             # losses were computed on the local batch shard; average them
             total = jax.lax.pmean(total, axes)

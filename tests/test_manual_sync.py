@@ -64,18 +64,22 @@ def zero_plan(n_persist=0, **kw):
 # numerics parity + EF carry-over
 # ---------------------------------------------------------------------------
 @needs_multi_device
-@pytest.mark.parametrize("n_persist", [4, 0], ids=["ddp", "zero"])
-def test_manual_matches_xla_losses_over_ten_steps(n_persist):
-    """Acceptance (ISSUE-2 ddp, ISSUE-3 zero): int8+EF manual sync tracks the
-    xla path within bf16 tolerance over >= 10 steps for both the replicated
-    (gather-synced) and the ZeRO-sharded (reduce-scattered) layouts. The
-    paths quantize before vs after the reduce, so they are not bitwise equal
-    — EF keeps them together."""
+@pytest.mark.parametrize("n_persist,zero_stage",
+                         [(4, 3), (0, 2), (0, 3)],
+                         ids=["ddp", "zero2", "zero3"])
+def test_manual_matches_xla_losses_over_ten_steps(n_persist, zero_stage):
+    """Acceptance (ISSUE-2 ddp, ISSUE-3 zero2, ISSUE-4 zero3): int8+EF manual
+    sync tracks the xla path within bf16 tolerance over >= 10 steps for the
+    replicated (gather-synced) layout and both ZeRO-sharded dataflows —
+    up-front gather ("zero2") and lazy per-chunk gather with the
+    reduce-scatter transpose ("zero3"). The paths quantize before vs after
+    the reduce, so they are not bitwise equal — EF keeps them together."""
     mesh = dp_mesh()
     _, _, l_xla, _ = run_steps(
         zero_plan(n_persist, grad_compress="int8_ef", sync_mode="xla"), mesh)
     _, _, l_man, m_man = run_steps(
-        zero_plan(n_persist, grad_compress="int8_ef", sync_mode="manual"), mesh)
+        zero_plan(n_persist, grad_compress="int8_ef", sync_mode="manual",
+                  zero_stage=zero_stage), mesh)
     assert all(np.isfinite(l_man))
     # bf16 has ~8 mantissa bits: tolerate ~2 ulp of relative drift
     np.testing.assert_allclose(l_man, l_xla, rtol=2e-2)
@@ -95,13 +99,15 @@ def test_manual_int8_payload_is_on_the_wire():
 
 
 @needs_multi_device
-def test_manual_zero_int8_reduce_scatter_on_the_wire_and_shard_ef():
-    """Acceptance (ISSUE-3): a ZeRO-sharded manual plan compiles to s8
-    scatter-equivalent collectives (all_to_all of the quantized chunks), and
-    its EF residuals are shard-sized on each device yet globally
-    checkpointable (full logical shape, sharded layout)."""
+@pytest.mark.parametrize("zero_stage", [2, 3], ids=["zero2", "zero3"])
+def test_manual_zero_int8_reduce_scatter_on_the_wire_and_shard_ef(zero_stage):
+    """Acceptance (ISSUE-3/4): a ZeRO-sharded manual plan compiles to s8
+    scatter-equivalent collectives (all_to_all of the quantized chunks) in
+    both dataflows, and its EF residuals are shard-sized on each device yet
+    globally checkpointable (full logical shape, sharded layout)."""
     mesh = dp_mesh()
-    plan = zero_plan(grad_compress="int8_ef", sync_mode="manual")
+    plan = zero_plan(grad_compress="int8_ef", sync_mode="manual",
+                     zero_stage=zero_stage)
     art = build_train_step(TINY, plan, mesh, SHAPE)
     hlo = art.lower(donate=False).compile().as_text()
     s8_a2a = [ln for ln in hlo.splitlines() if "all-to-all" in ln and "s8[" in ln]
@@ -213,12 +219,13 @@ def test_search_rejects_manual_sync_without_compression():
 
 LATTICE = [
     # (n_persist, n_host, n_swap, tp, dp_only, zero1) -> expected kind
+    # (default zero_stage=3; the zero_stage=2 mapping is tested below)
     ((4, 0, 0, 1, False, False), "ddp"),
     ((4, 0, 0, 4, False, False), None),    # TP shards the params
     ((4, 0, 0, 4, True, False), "ddp"),    # dp_only absorbs the model axis
-    ((0, 0, 0, 1, False, False), "zero"),  # ISSUE-3: previously None
-    ((2, 0, 0, 1, False, False), "zero"),  # mixed persist/ZeRO
-    ((0, 0, 0, 1, True, False), "zero"),   # dp_only moot at tp=1
+    ((0, 0, 0, 1, False, False), "zero3"),  # ISSUE-4: lazy gather by default
+    ((2, 0, 0, 1, False, False), "zero3"),  # mixed persist/ZeRO
+    ((0, 0, 0, 1, True, False), "zero3"),   # dp_only moot at tp=1
     ((0, 0, 0, 4, False, False), None),    # ZeRO + live TP axis: no kind
     ((0, 0, 0, 4, True, False), None),     # dp_only can't fix shard-axis
     ((0, 2, 0, 1, False, False), None),    # host memory kinds in shard_map
@@ -232,8 +239,8 @@ LATTICE = [
 @pytest.mark.parametrize("cell,kind", LATTICE)
 def test_manual_sync_kind_lattice(cell, kind):
     """manual_sync_kind over the plan lattice (persist x host x swap x TP x
-    dp_only x zero1): previously-ineligible ZeRO plans now report "zero",
-    previously-raising combinations still report None (and raise in
+    dp_only x zero1): ZeRO-sharded eligible plans report "zero3" (the lazy
+    default), ineligible combinations still report None (and raise in
     build_train_step — see test_manual_rejects_unlowerable_layouts)."""
     n_persist, n_host, n_swap, tp, dp_only, zero1 = cell
     plan = MemoryPlan(4, 2, n_persist=n_persist, n_host=n_host, n_swap=n_swap,
@@ -241,6 +248,17 @@ def test_manual_sync_kind_lattice(cell, kind):
     assert plan.manual_sync_kind(tp_degree=tp) == kind
     # manual_sync_ok stays the "can lower at all" predicate
     assert plan.manual_sync_ok(tp) == (kind is not None)
+
+
+@pytest.mark.parametrize("cell,kind", LATTICE)
+def test_manual_sync_kind_lattice_zero_stage2(cell, kind):
+    """zero_stage=2 flips only the ZeRO verdicts ("zero3" -> "zero2"); the
+    ddp/None cells are independent of the dataflow knob."""
+    n_persist, n_host, n_swap, tp, dp_only, zero1 = cell
+    plan = MemoryPlan(4, 2, n_persist=n_persist, n_host=n_host, n_swap=n_swap,
+                      dp_only=dp_only, zero1_persistent=zero1, zero_stage=2)
+    expected = "zero2" if kind == "zero3" else kind
+    assert plan.manual_sync_kind(tp_degree=tp) == expected
 
 
 # ---------------------------------------------------------------------------
@@ -388,5 +406,5 @@ def test_autotuner_emits_zero_manual_when_persist_does_not_fit():
     assert res.feasible
     assert res.plan.sync_mode == "manual"
     assert res.plan.n_persist < w.n_chunks
-    assert res.plan.manual_sync_kind(w.mesh.tp_degree) == "zero"
+    assert res.plan.manual_sync_kind(w.mesh.tp_degree) in ("zero2", "zero3")
     assert res.memory.peak < cap
