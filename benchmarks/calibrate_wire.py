@@ -36,14 +36,30 @@ split per fit — s8 belongs to t_reduce, bf16 gathers to t_gather. A zero2
 The EF-residual memory term is calibrated the same run: the fp32 residual
 tree's bytes over the grad bytes, measured from the built train state specs.
 
+The serve-side ``h2d_page`` factor (ISSUE-5) is calibrated from a *paged
+decode* program: the page-table KV cache (repro.serve.paging) fetches each
+cold page as a page-shaped slice of the host-resident cold store inside the
+decode repeat scan, and those slices are countable in the lowered program —
+cold-store operand shape -> page result shape, a signature nothing else in
+the program produces. The fit is structural truth for the fetch pipeline:
+measured page-fetch bytes per scan iteration over the modeled
+pages x (k,v) x attention-positions inventory at factor 1. A healthy build
+fits ~1.0; drift means fetches were duplicated (remat regression) or
+hoisted/merged out of the per-page pipeline (the full-cache-gather
+regression paging exists to avoid). The planner's feasibility term
+multiplies this factor into the analytic cold-page bound
+(cost_model.t_page_fetch; the hot-window discount stays analytic because
+page residency is decided at run time by the write pointer).
+
 Usage:
     PYTHONPATH=src python benchmarks/calibrate_wire.py [--out reports/]
         [--install] [--dry-run]
 
 ``--install`` also writes src/repro/core/wire_calibration.json (the copy the
 cost model auto-loads, committed per backend). ``--dry-run`` is the CI smoke
-mode: measure the two anchor configs (uncompressed xla + zero-manual int8),
-sanity-check the fitted factors, write nothing, exit non-zero on drift.
+mode: measure the anchor configs (uncompressed xla + zero-manual int8 + the
+paged-decode h2d_page fit), sanity-check the fitted factors against their
+bands, write nothing, exit non-zero on drift.
 """
 from __future__ import annotations
 
@@ -116,6 +132,70 @@ def _wire_bytes(hlo: str) -> tuple[float, float, float, float]:
         for o in ops if o.kind == "all-gather" and o.dtype not in ("s8", "u8")
     )
     return raw, corrected, s8, gather
+
+
+def calibrate_serve(arch: str = "llama3-405b", *, seq_len: int = 64,
+                    batch: int = 4, page_size: int = 8, n_hot: int = 2) -> dict:
+    """Fit the ``h2d_page`` factor from a compiled paged decode step.
+
+    Measured: page-shaped slices of the cold store in the lowered program
+    (shape-matched: (B, S, kv, hd) operand -> (B, P, kv, hd) result; the hot
+    ring has a different operand shape whenever n_hot < n_pages, so the match
+    is unambiguous), in bytes per decode repeat. Modeled at factor 1: every
+    page of both k and v sliced exactly once per attention position —
+    n_pages x 2 x attn_positions x page_bytes. Global (pre-partition) bytes
+    on both sides, so the ratio is chip-count free.
+    """
+    import re
+
+    from repro.configs.base import ShapeConfig
+    from repro.models import kvcache as KV
+    from repro.models.model import superblock_period
+    from repro.serve.paging import choose_paging
+    from repro.train.step_builder import build_decode_step
+
+    cfg = reduced(ARCHS[arch])
+    shape = ShapeConfig("calib-serve", seq_len, batch, "decode")
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    s_kv = KV.cache_len(cfg, seq_len)
+    spec = choose_paging(s_kv, page_size, n_hot)
+    assert spec.n_hot < spec.n_pages, "need cold pages to measure fetches"
+    plan = MemoryPlan(n_chunks=4, n_blocks=2, n_persist=4, n_host=spec.n_cold)
+    art = build_decode_step(cfg, plan, mesh, shape, paging=spec)
+    lowered = art.lower(donate=False)
+    text = lowered.as_text()
+
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    cold_t = f"tensor<{batch}x{s_kv}x{kv}x{hd}x[a-z0-9]+>"
+    page_t = f"tensor<{batch}x{spec.page_size}x{kv}x{hd}x[a-z0-9]+>"
+    n_slices = len(re.findall(
+        rf"slice.*\({cold_t}\) -> {page_t}", text))
+    page_bytes = batch * spec.page_size * kv * hd * dt.itemsize
+    measured = n_slices * page_bytes
+    attn_pos = sum(1 for j in range(superblock_period(cfg))
+                   if cfg.mixer_at(j) == "attention")
+    modeled = spec.n_pages * 2 * attn_pos * page_bytes
+    # the compiled program must still lower (the slice census is pre-opt;
+    # compiling guards against the paged path rotting into a compile error)
+    lowered.compile()
+    return {
+        "h2d_page": round(measured / max(modeled, 1), 4),
+        "fit": {
+            "arch": arch, "spec": dataclasses_asdict_safe(spec),
+            "page_slices": n_slices, "page_bytes": page_bytes,
+            "measured_bytes": measured, "modeled_factor1_bytes": modeled,
+        },
+    }
+
+
+def dataclasses_asdict_safe(obj) -> dict:
+    import dataclasses as _dc
+
+    return _dc.asdict(obj) if _dc.is_dataclass(obj) else dict(obj)
 
 
 def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> dict:
@@ -207,6 +287,10 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
             factors["manual"][compress] = round(
                 m["wire_bytes_corrected"] / m["modeled_factor1_bytes"], 4)
 
+    # serve-side page-fetch factor (paged decode; independent program)
+    serve = calibrate_serve(steps_model)
+    factors["serve"] = {"h2d_page": serve["h2d_page"]}
+
     entry = {
         "wire_factors": factors,
         "fit": {
@@ -214,6 +298,7 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
             "mesh": list(mesh.devices.shape),
             "grad_bytes": grad_bytes,
             "measured": measured,
+            "serve": serve["fit"],
         },
     }
     if ef_factor is not None:
@@ -256,6 +341,15 @@ def main() -> int:
                   "per-chunk gathers no longer match the modeled per-chunk "
                   "pipeline (up-front gather regression, or gathers duplicated"
                   " beyond the BWD re-gather)")
+            return 1
+        hp = entry["wire_factors"].get("serve", {}).get("h2d_page")
+        print(f"[calibrate_wire --dry-run] h2d_page={hp}")
+        if hp is None or not (0.5 <= hp <= 2.0):
+            print("[calibrate_wire --dry-run] FAIL: paged-decode page-fetch "
+                  f"factor {hp} outside the sane band [0.5, 2.0] — cold "
+                  "pages are being fetched more than once per layer "
+                  "(duplication) or the per-page pipeline collapsed into a "
+                  "full-cache gather (hoist regression)")
             return 1
         print("[calibrate_wire --dry-run] OK")
         return 0

@@ -105,7 +105,7 @@ def search(
 ) -> SearchResult:
     """Find the fastest plan fitting in per-chip memory."""
     t0 = time.time()
-    capacity = capacity_bytes if capacity_bytes is not None else w.hw.hbm_bytes * 0.92
+    capacity = capacity_bytes if capacity_bytes is not None else w.hw.capacity_bytes()
     nc, nb = w.n_chunks, w.n_blocks
     best: SearchResult | None = None
     evaluated = 0

@@ -69,6 +69,13 @@ DEFAULT_WIRE_FACTORS = {
     "xla": {"none": 1.0, "bf16": 1.0, "int8_ef": 1.0},
     "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5, "int8_ef_rs": 0.5,
                "gather_bf16": 1.0},
+    # Serving pipelines (repro.serve). "h2d_page" scales the cold-page
+    # fetch bytes of the paged decode step against the modeled
+    # pages x page_bytes x attention-layers product — calibrated from the
+    # page-fetch slices of the compiled paged program
+    # (benchmarks/calibrate_wire.py's h2d_page config). Per-key defaulting
+    # (schema v2) keeps pre-serving calibration files loading cleanly.
+    "serve": {"h2d_page": 1.0},
 }
 
 # fp32 error-feedback residual per param = 2x the bf16 grad bytes; the
@@ -396,6 +403,64 @@ def step_totals(w: Workload, plan: MemoryPlan) -> tuple[float, float]:
     return flops, bytes_
 
 
+# ---------------------------------------------------------------------------
+# Serving: paged KV-cache fetch terms (repro.serve; docs/serving.md)
+# ---------------------------------------------------------------------------
+def _attn_layer_count(cfg: ModelConfig) -> int:
+    return sum(1 for layer in range(cfg.num_layers)
+               if cfg.mixer_at(layer) == "attention")
+
+
+def page_fetch_bytes_per_step(cfg: ModelConfig, shape: ShapeConfig,
+                              mesh: MeshSpec, spec) -> float:
+    """Per-device host-link bytes one paged decode step moves, worst case:
+    every attention layer fetches its ``n_cold`` cold pages (k and v) while
+    the hot window serves the rest from HBM. The write-through token update
+    is negligible against the page reads and is not priced."""
+    import numpy as np
+
+    hd = cfg.resolved_head_dim
+    itemsize = np.dtype(cfg.dtype).itemsize
+    page_global = 2 * shape.global_batch * spec.page_size * cfg.num_kv_heads * hd * itemsize
+    per_dev = page_global / (mesh.zero_degree * mesh.tp_degree)
+    return spec.n_cold * per_dev * _attn_layer_count(cfg)
+
+
+def t_page_fetch(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                 hw: HardwareSpec, spec) -> float:
+    """Host-link time of one paged decode step's cold-page fetches, at the
+    calibrated ``h2d_page`` factor (wire_factor("serve", "h2d_page"))."""
+    nbytes = page_fetch_bytes_per_step(cfg, shape, mesh, spec)
+    return nbytes * wire_factor("serve", "h2d_page") / hw.host_bw
+
+
+def t_decode_compute(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                     hw: HardwareSpec) -> float:
+    """One decode step's compute window per device: the active-parameter
+    matmuls against the weight + cache read bandwidth floor."""
+    b_loc = shape.global_batch / mesh.zero_degree
+    flops = 2.0 * cfg.active_param_count() * b_loc / mesh.tp_degree
+    weights_dev = sum(c.param_bytes for c in chunk_inventory(cfg)) / mesh.tp_degree
+    from repro.core.serve_plan import cache_bytes_per_device
+
+    read = weights_dev + cache_bytes_per_device(cfg, shape, mesh)
+    return max(hw.matmul_time(flops), hw.hbm_time(read))
+
+
+def page_fetch_feasible(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                        hw: HardwareSpec, spec) -> bool:
+    """Can the double-buffered prefetch hide the cold-page fetches?
+
+    Mirrors the training path's ``swap_feasible`` drain check: the paged
+    decode step overlaps h2d fetches with attention compute, so the pipeline
+    sustains decode speed iff one step's fetch bytes drain within one step's
+    compute window. Infeasible specs still *run* — they just decode at
+    host-link speed — so the planner prefers feasible hot windows but may
+    fall back (serve_plan)."""
+    return t_page_fetch(cfg, shape, mesh, hw, spec) <= t_decode_compute(
+        cfg, shape, mesh, hw)
+
+
 def serve_totals(w: Workload, plan: MemoryPlan) -> tuple[float, float]:
     """(flops, hbm_bytes) per chip for one serve step (prefill or decode)."""
     mesh = w.mesh
@@ -408,9 +473,21 @@ def serve_totals(w: Workload, plan: MemoryPlan) -> tuple[float, float]:
     weights_dev = sum(c.param_bytes for c in w.chunks) / mesh.tp_degree
     if plan.n_persist < plan.n_chunks:
         weights_dev = weights_dev  # gathered through HBM once either way
-    from repro.core.serve_plan import cache_bytes_per_device
+    from repro.core.serve_plan import (
+        _paged_parts_per_device,
+        cache_bytes_per_device,
+        paging_from_plan,
+    )
 
-    cache_dev = cache_bytes_per_device(w.cfg, w.shape, mesh)
+    spec = paging_from_plan(w.cfg, w.shape, plan)
+    if spec is None:
+        cache_dev = cache_bytes_per_device(w.cfg, w.shape, mesh)
+    else:
+        # paged decode: HBM sees the hot rings plus each layer's gathered
+        # reconstruction streaming through (the cold pages ride the host link,
+        # priced separately by t_page_fetch)
+        parts = _paged_parts_per_device(w.cfg, w.shape, mesh, spec)
+        cache_dev = parts["hbm"] + parts["transient"] * _attn_layer_count(w.cfg)
     return flops, weights_dev + cache_dev
 
 

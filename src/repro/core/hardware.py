@@ -11,6 +11,22 @@ from __future__ import annotations
 import dataclasses
 
 
+# Shared capacity fractions (planner + serving; docs/cost_model.md §1).
+# HBM_CAPACITY_FRACTION is the usable slice of a chip's HBM the planners
+# budget against — the remainder absorbs XLA's allocator slack, collective
+# scratch, and fragmentation. It is the single source of truth for both the
+# training search (core/autotuner.search capacity default, launch/dryrun's
+# feasibility flag) and the serving planner (core/serve_plan).
+HBM_CAPACITY_FRACTION = 0.92
+# SERVE_RESIDENT_HEADROOM is serving-specific: the fraction of the *budget*
+# that weights + KV cache may fill while still keeping everything resident.
+# The reserve covers what the serve memory estimate does not enumerate —
+# decode workspace, logits, and growth between planning and admission
+# (scheduler admits until pages run out). Above this line the planner starts
+# trading residency for host pages / ZeRO-sharded weights.
+SERVE_RESIDENT_HEADROOM = 0.75
+
+
 @dataclasses.dataclass(frozen=True)
 class HardwareSpec:
     name: str
@@ -27,12 +43,22 @@ class HardwareSpec:
     mem_efficiency: float = 0.8
     coll_efficiency: float = 0.85
     host_flops: float = 2.0e12  # host-side update throughput (fused CPU Adam analogue)
+    # Capacity fractions (see module constants above for semantics); fields so
+    # a HardwareSpec can be re-calibrated per deployment without touching the
+    # shared defaults.
+    hbm_capacity_fraction: float = HBM_CAPACITY_FRACTION
+    serve_resident_headroom: float = SERVE_RESIDENT_HEADROOM
 
     def matmul_time(self, flops: float) -> float:
         return flops / (self.peak_flops * self.flops_efficiency)
 
     def hbm_time(self, nbytes: float) -> float:
         return nbytes / (self.hbm_bw * self.mem_efficiency)
+
+    def capacity_bytes(self) -> float:
+        """Plannable HBM per chip — the Eq. 1 M_capacity both the training
+        search and the serving planner constrain against."""
+        return self.hbm_bytes * self.hbm_capacity_fraction
 
 
 TPU_V5E = HardwareSpec(

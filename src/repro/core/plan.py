@@ -94,7 +94,14 @@ class MemoryPlan:
     def __post_init__(self):
         assert 0 <= self.n_persist <= self.n_chunks
         assert 0 <= self.n_buffer <= self.n_chunks - self.n_persist
-        assert 0 <= self.n_host <= self.n_chunks - self.n_persist
+        # Training plans bound n_host by the non-persistent chunk count.
+        # Serving plans overload n_host as "KV-cache pages offloaded to host"
+        # (core/serve_plan.py), which is legal alongside n_persist == n_chunks
+        # because chunk_placement checks persistence first — the weight stack
+        # stays persistent while the page count rides in n_host.
+        assert self.n_host >= 0
+        assert (self.n_host <= self.n_chunks - self.n_persist
+                or self.n_persist == self.n_chunks)
         assert 0 <= self.n_swap + self.n_checkpoint <= self.n_blocks
         assert self.microbatch >= 1
         assert self.grad_compress in ("none", "bf16", "int8_ef"), self.grad_compress

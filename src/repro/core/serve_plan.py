@@ -1,10 +1,32 @@
 """Serving (prefill/decode) memory planning.
 
 Serving has no gradients or optimizer states, so chunk management degenerates
-to persist-vs-gather for weights (paper's scope is training; we still plan the
-decode cells). Heuristic: keep the whole weight stack persistent when it fits
-comfortably next to the KV cache; otherwise ZeRO-shard the blocks and gather
-per layer.
+to persist-vs-gather for weights — plus, since the paged KV subsystem
+(repro.serve), a second memory tier for the *cache*: ``MemoryPlan.n_host``
+on a serve plan counts KV-cache pages offloaded to host memory (cold pages),
+not host-resident weight chunks. The planner:
+
+  1. keeps everything resident when weights + cache fit inside
+     ``hw.serve_resident_headroom`` of the HBM budget
+     (``hw.capacity_bytes()``, shared with the training search — Eq. 1's
+     M_capacity);
+  2. otherwise, while the weight stack alone still fits, pages the KV
+     cache: searches the largest hot window (most HBM use, least host
+     traffic) whose footprint fits the budget AND whose cold-page fetches
+     drain inside the decode compute window — the ``page_fetch_feasible``
+     term, mirroring the training path's ``swap_feasible`` host-link drain
+     check (docs/serving.md §3). When no window satisfies both, the
+     planner returns the *least-infeasible* layout rather than pretending:
+     the largest window that at least fits, else the minimum-HBM one-page
+     window (ZeRO-sharding the weights would not shrink the cache, so a
+     paged-but-tight plan still beats that fallback; callers see the truth
+     via ``serve_memory_estimate`` peak vs ``hw.capacity_bytes()``);
+  3. only when the weights themselves overflow does it fall back to
+     ZeRO-sharding the weight stack (gather per layer).
+
+``paging_from_plan`` is the inverse mapping the step builder uses: a serve
+plan's ``n_host`` (+ the module page-size default) back to a
+``serve.paging.PagingSpec``.
 """
 from __future__ import annotations
 
@@ -18,6 +40,11 @@ from repro.core.plan import MemoryPlan
 from repro.models import kvcache as KV
 from repro.models.model import num_repeats
 
+# Default page size (tokens). Large enough that a page's h2d transfer is
+# bandwidth-bound rather than latency-bound on PCIe/host-DMA links, small
+# enough that the hot-window search has resolution at decode_32k contexts.
+PAGE_SIZE = 256
+
 
 def cache_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec) -> float:
     specs = KV.cache_specs(cfg, shape.global_batch, shape.seq_len)
@@ -29,19 +56,107 @@ def cache_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec)
     return total / (mesh.zero_degree * mesh.tp_degree)
 
 
+def _paged_parts_per_device(cfg, shape, mesh: MeshSpec, spec) -> dict[str, float]:
+    """serve.paging.cache_partition_bytes scaled to per-device shards."""
+    from repro.serve.paging import cache_partition_bytes
+
+    parts = cache_partition_bytes(cfg, shape.global_batch, shape.seq_len, spec)
+    scale = mesh.zero_degree * mesh.tp_degree
+    return {k: v / scale for k, v in parts.items()}
+
+
+def default_paging_spec(cfg: ModelConfig, shape: ShapeConfig, n_hot: int | None = None):
+    """PagingSpec for this (cfg, shape) at the module page size; ``n_hot``
+    None means fully hot (no cold pages)."""
+    from repro.serve.paging import choose_paging
+
+    s_kv = KV.cache_len(cfg, shape.seq_len)
+    # resolve the real page geometry first (choose_paging may shrink the
+    # page size to a divisor of s_kv, changing the page count), THEN clamp
+    # the hot request against it — n_hot=None really is fully hot
+    base = choose_paging(s_kv, PAGE_SIZE, 1)
+    return choose_paging(s_kv, base.page_size,
+                         base.n_pages if n_hot is None else n_hot)
+
+
+def paging_from_plan(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan):
+    """Recover the PagingSpec a serve plan's ``n_host`` (cold pages) encodes;
+    None for resident plans. ``n_host`` only carries the page meaning on
+    all-persistent plans — on sharded-weight plans it keeps its training
+    semantics (host weight chunks).
+
+    Divisibility caveat: the hot window must tile the page ring, so a
+    hand-written ``n_host`` whose complement does not divide the page count
+    is clamped (``choose_paging``) — the derived ``spec.n_cold`` can then
+    exceed ``plan.n_host``. Every consumer (step builder, memory estimate,
+    serve_totals) derives through this one function, so they stay mutually
+    consistent; planner-emitted plans always round-trip exactly
+    (``serve_plan`` only proposes divisor-valid windows)."""
+    if plan.n_host <= 0 or plan.n_persist < plan.n_chunks:
+        return None
+    full = default_paging_spec(cfg, shape)
+    n_hot = max(1, full.n_pages - plan.n_host)
+    from repro.serve.paging import choose_paging
+
+    return choose_paging(full.cache_len, full.page_size, n_hot)
+
+
 def serve_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, hw: HardwareSpec) -> MemoryPlan:
+    from repro.core.cost_model import page_fetch_feasible
+
     chunks = chunk_inventory(cfg)
     nc, nb = len(chunks), num_repeats(cfg)
     weights_dev = sum(c.param_bytes for c in chunks) / mesh.tp_degree
     cache_dev = cache_bytes_per_device(cfg, shape, mesh)
-    budget = hw.hbm_bytes * 0.9
-    if weights_dev + cache_dev < 0.7 * budget:
+    budget = hw.capacity_bytes()
+    if weights_dev + cache_dev < hw.serve_resident_headroom * budget:
         return MemoryPlan(n_chunks=nc, n_blocks=nb, n_persist=nc)
-    # ZeRO-shard everything; decode gathers layer by layer
+
+    # page the cache: the cache is the overflowing tenant whenever the
+    # weight stack alone still fits — prefer host pages over weight
+    # sharding then. Candidate hot windows are scanned largest-first (most
+    # HBM use -> least host traffic); the first fetch-feasible one wins,
+    # else the largest that fits at all (a slow link beats an OOM), else
+    # the minimum-HBM one-page window.
+    if shape.mode == "decode" and not cfg.attention_free:
+        full = default_paging_spec(cfg, shape)
+        fitting: list = []
+        for n_hot in range(full.n_pages - 1, 0, -1):
+            if full.n_pages % n_hot:
+                continue  # hot window must tile the page ring
+            spec = default_paging_spec(cfg, shape, n_hot)
+            parts = _paged_parts_per_device(cfg, shape, mesh, spec)
+            dev_cache = parts["hbm"] + parts["transient"]
+            if weights_dev + dev_cache < hw.serve_resident_headroom * budget:
+                fitting.append(spec)
+        chosen = None
+        for spec in fitting:
+            if page_fetch_feasible(cfg, shape, mesh, hw, spec):
+                chosen = spec
+                break
+        if chosen is None and fitting:
+            chosen = fitting[0]
+        if chosen is None and full.n_pages > 1 and (
+                weights_dev < hw.serve_resident_headroom * budget):
+            chosen = default_paging_spec(cfg, shape, 1)
+        if chosen is not None:
+            return MemoryPlan(n_chunks=nc, n_blocks=nb, n_persist=nc,
+                              n_host=chosen.n_cold)
+
+    # weights are the overflowing tenant (or paging cannot apply): ZeRO-shard
+    # the stack and gather per layer. Combining sharded weights with paged
+    # caches in one plan is future work — n_host on a non-all-persistent plan
+    # still means host-resident weight chunks (training semantics).
     return MemoryPlan(n_chunks=nc, n_blocks=nb, n_persist=0)
 
 
 def serve_memory_estimate(cfg, shape, mesh: MeshSpec, plan: MemoryPlan) -> dict:
+    """Per-device memory picture of a serve plan.
+
+    Keys: ``weights_gb``, ``cache_gb`` (device-resident cache: the full
+    cache for resident plans, hot rings + one layer's gathered transient for
+    paged ones), ``host_cache_gb`` (cold pages), ``peak_gb`` (device).
+    """
     chunks = chunk_inventory(cfg)
     weights = sum(c.param_bytes for c in chunks)
     if plan.n_persist == plan.n_chunks:
@@ -49,9 +164,17 @@ def serve_memory_estimate(cfg, shape, mesh: MeshSpec, plan: MemoryPlan) -> dict:
     else:
         blk = max((c.param_bytes for c in chunks if c.is_block), default=0)
         w_dev = weights / (mesh.tp_degree * mesh.zero_degree) + 2 * blk / mesh.tp_degree
-    cache = cache_bytes_per_device(cfg, shape, mesh)
+    spec = paging_from_plan(cfg, shape, plan)
+    if spec is None:
+        cache = cache_bytes_per_device(cfg, shape, mesh)
+        host_cache = 0.0
+    else:
+        parts = _paged_parts_per_device(cfg, shape, mesh, spec)
+        cache = parts["hbm"] + parts["transient"]
+        host_cache = parts["host"]
     return {
         "weights_gb": w_dev / 1e9,
         "cache_gb": cache / 1e9,
+        "host_cache_gb": host_cache / 1e9,
         "peak_gb": (w_dev + cache) / 1e9,
     }

@@ -61,7 +61,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, sp: str = "off",
                 w_eval = _dc.replace(w, mesh=new)
             rt, mem = estimate_runtime(w_eval, plan), estimate_memory(w_eval, plan)
             w = w_eval
-            rec["plan_feasible"] = mem.peak < hw.hbm_bytes * 0.92
+            rec["plan_feasible"] = mem.peak < hw.capacity_bytes()
         else:
             res = search(w, sp=sp)
             plan = res.plan

@@ -70,41 +70,105 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
     )
 
 
-def _decode_attention(ap: dict, h: jax.Array, cache: dict, pos: jax.Array, cfg: ModelConfig):
+def rope_positions(pos: jax.Array) -> jax.Array:
+    """RoPE positions for the decoded token: (1,) for a shared scalar ``pos``,
+    (B, 1) for per-slot positions (continuous batching)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((1,), pos, jnp.int32)
+    return pos[:, None]
+
+
+def decode_mask(pos: jax.Array, s_kv: int, sliding: bool) -> jax.Array:
+    """Additive attention mask over cache slots at decode position ``pos``.
+
+    Returns (S_kv,) for scalar ``pos`` or (B, S_kv) for per-slot positions.
+    Sliding-window caches are ring buffers: every slot is valid once the ring
+    has wrapped (pos >= s_kv); before that, validity follows slot order.
+    """
+    kpos = jnp.arange(s_kv)
+    if jnp.ndim(pos):
+        kpos = kpos[None, :]
+        pos = pos[:, None]
+    if sliding:
+        valid = (pos >= s_kv) | (kpos <= pos)
+    else:
+        valid = kpos <= pos
+    return jnp.where(valid, 0.0, L.NEG_INF)
+
+
+def write_slot(buf: jax.Array, val: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write one decoded token into a (B, S, ...) cache at ``slot``.
+
+    Scalar ``slot`` keeps the resident fast path (dynamic_update_slice);
+    per-slot (B,) writes use a one-hot select over the slot axis — every batch
+    row lands at its own position (continuous batching).
+    """
+    val = val.astype(buf.dtype)
+    if jnp.ndim(slot) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
+    rows = jnp.arange(buf.shape[1])[None, :] == slot[:, None]  # (B, S)
+    rows = rows.reshape(rows.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(rows, val, buf)
+
+
+class ResidentKV:
+    """Default decode cache I/O: the whole (B, S, kv, hd) cache lives in HBM.
+
+    ``update_and_fetch`` is the seam the paged serving subsystem replaces
+    (repro.serve.paging.PagedKV): write the decoded token, return the full
+    key/value views attention runs over plus the new cache entry — the same
+    hook pattern as ``Run.lazy_gather`` for training-weight gathers.
+    ``entry_keys`` names the cache leaves the hook consumes per attention
+    position (the paged layout splits each of k/v into a hot ring + cold
+    pages).
+    """
+
+    entry_keys = ("k", "v")
+
+    def update_and_fetch(self, entry: dict, k: jax.Array, v: jax.Array,
+                         pos: jax.Array, cfg: ModelConfig):
+        s_kv = entry["k"].shape[1]
+        slot = pos % s_kv if cfg.sliding_window else pos
+        new_k = write_slot(entry["k"], k, slot)
+        new_v = write_slot(entry["v"], v, slot)
+        mask = decode_mask(pos, s_kv, bool(cfg.sliding_window))
+        return new_k, new_v, mask, {"k": new_k, "v": new_v}
+
+
+RESIDENT_KV = ResidentKV()
+
+
+def _decode_attention(ap: dict, h: jax.Array, cache: dict, pos: jax.Array,
+                      cfg: ModelConfig, kv_io=None):
     """h: (B,1,D). Returns (out (B,1,D), new_cache)."""
     b = h.shape[0]
     hd = cfg.resolved_head_dim
     q = (h @ ap["wq"]).reshape(b, 1, cfg.num_heads, hd)
     k = (h @ ap["wk"]).reshape(b, 1, cfg.num_kv_heads, hd)
     v = (h @ ap["wv"]).reshape(b, 1, cfg.num_kv_heads, hd)
-    positions = jnp.full((1,), pos, jnp.int32)
+    positions = rope_positions(pos)
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
-    s_kv = cache["k"].shape[1]  # (B, S_kv, n_kv, hd)
-    slot = pos % s_kv if cfg.sliding_window else pos
-    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    if cfg.sliding_window:
-        # ring buffer: all live slots are valid once pos >= s_kv; validity mask
-        kpos = jnp.arange(s_kv)
-        valid = jnp.where(pos >= s_kv, jnp.ones((s_kv,), bool), kpos <= pos)
-        logits_mask = jnp.where(valid, 0.0, L.NEG_INF)
-        out = _masked_decode_attn(q, new_k, new_v, logits_mask)
-    else:
-        kpos = jnp.arange(s_kv)
-        logits_mask = jnp.where(kpos <= pos, 0.0, L.NEG_INF)
-        out = _masked_decode_attn(q, new_k, new_v, logits_mask)
-    return out.reshape(b, 1, -1) @ ap["wo"], {"k": new_k, "v": new_v}
+    kv_io = kv_io or RESIDENT_KV
+    full_k, full_v, logits_mask, new_cache = kv_io.update_and_fetch(cache, k, v, pos, cfg)
+    out = _masked_decode_attn(q, full_k, full_v, logits_mask)
+    return out.reshape(b, 1, -1) @ ap["wo"], new_cache
 
 
 def _masked_decode_attn(q, k, v, logits_mask):
-    """Single-query attention over the whole cache. q: (B,1,Hq,hd)."""
+    """Single-query attention over the whole cache. q: (B,1,Hq,hd).
+    ``logits_mask``: (S_kv,) shared, or (B, S_kv) per-slot (continuous
+    batching decodes every batch row at its own position)."""
     b, _, hq, hd = q.shape
     s_kv, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
     qh = (q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))).reshape(b, hkv, g, hd)
     logits = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(jnp.float32))
-    logits = logits + logits_mask[None, None, None, :]
+    if logits_mask.ndim == 2:
+        logits = logits + logits_mask[:, None, None, :]
+    else:
+        logits = logits + logits_mask[None, None, None, :]
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
     return out.reshape(b, 1, hq, hd).astype(q.dtype)
@@ -118,13 +182,15 @@ def _decode_cross_attention(ap: dict, h: jax.Array, xk: jax.Array, xv: jax.Array
     return out.reshape(b, 1, -1) @ ap["wo"]
 
 
-def decode_position(pparams: dict, x: jax.Array, pcache: dict, pos: jax.Array, cfg: ModelConfig):
+def decode_position(pparams: dict, x: jax.Array, pcache: dict, pos: jax.Array,
+                    cfg: ModelConfig, kv_io=None):
     """One layer, one token. x: (B,1,D)."""
     h = L.apply_norm(pparams["norm1"], x, cfg.norm)
     new_cache = dict(pcache)
     if "attn" in pparams:
-        sub = {"k": pcache["k"], "v": pcache["v"]}
-        mix, upd = _decode_attention(pparams["attn"], h, sub, pos, cfg)
+        keys = (kv_io or RESIDENT_KV).entry_keys
+        sub = {name: pcache[name] for name in keys}
+        mix, upd = _decode_attention(pparams["attn"], h, sub, pos, cfg, kv_io=kv_io)
         new_cache.update(upd)
     else:
         state = (pcache["conv"], pcache["ssm"])
@@ -150,12 +216,20 @@ def decode_step(
     params: dict,
     cache: dict,
     tokens: jax.Array,  # (B, 1) int32 — the token decoded last step
-    pos: jax.Array,  # () int32 — its absolute position
+    pos: jax.Array,  # () int32 shared, or (B,) per-slot (continuous batching)
     cfg: ModelConfig,
     *,
     gather_specs=None,
+    kv_io=None,
 ) -> tuple[jax.Array, dict]:
-    """One decode step across the whole model. Returns (logits (B,V), cache)."""
+    """One decode step across the whole model. Returns (logits (B,V), cache).
+
+    ``kv_io`` swaps the attention-cache storage strategy per position (default
+    ``RESIDENT_KV``); the paged serving path passes ``serve.paging.PagedKV``,
+    whose cold pages live in host memory and are fetched page-wise inside this
+    same repeat scan — mirroring how ``Run.lazy_gather`` threads per-chunk
+    weight gathers through the training scan.
+    """
     from repro.models.model import embed_tokens, lm_head
 
     x = embed_tokens(params, tokens, cfg)
@@ -166,7 +240,8 @@ def decode_step(
         for j in range(p):
             specs = None if gather_specs is None else gather_specs[f"pos{j}"]
             pp = gather_weights(slices[f"pos{j}"]["params"], specs)
-            x, nc = decode_position(pp, x, slices[f"pos{j}"]["cache"], pos, cfg)
+            x, nc = decode_position(pp, x, slices[f"pos{j}"]["cache"], pos, cfg,
+                                    kv_io=kv_io)
             new_slices[f"pos{j}"] = nc
         return x, new_slices
 

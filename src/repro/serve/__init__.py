@@ -1,0 +1,39 @@
+"""Serving subsystem: paged KV caches, continuous batching, decode engine.
+
+Three modules mirror the training stack's plan->program split:
+
+  * ``paging``   — page-table KV cache: hot window resident in HBM, cold
+    pages in host memory, double-buffered h2d prefetch inside the decode
+    scan (the serving twin of the training path's lazy per-chunk gathers);
+  * ``scheduler`` — continuous batching: admit/evict/finish requests into
+    batch slots with per-slot sequence lengths and page allocation against
+    a bounded pool;
+  * ``engine``   — drives ``step_builder.build_decode_step`` (resident or
+    paged) over the scheduler's slot state, serving a request stream.
+
+See docs/serving.md for the dataflow and the plan-knob meanings.
+"""
+from repro.serve.engine import DecodeEngine, EngineReport
+from repro.serve.paging import (
+    PagedKV,
+    PagingSpec,
+    choose_paging,
+    init_paged_cache,
+    paged_cache_specs,
+    paged_to_resident,
+)
+from repro.serve.scheduler import ContinuousScheduler, PagePool, Request
+
+__all__ = [
+    "ContinuousScheduler",
+    "DecodeEngine",
+    "EngineReport",
+    "PagePool",
+    "PagedKV",
+    "PagingSpec",
+    "Request",
+    "choose_paging",
+    "init_paged_cache",
+    "paged_cache_specs",
+    "paged_to_resident",
+]

@@ -1,0 +1,175 @@
+"""Decode engine: continuous batching over a (resident or paged) decode step.
+
+``DecodeEngine`` owns the compiled step (``step_builder.build_decode_step``),
+a ``ContinuousScheduler``, and the live cache state. Each tick it
+
+  1. admits queued requests into free batch slots (zeroing the slots' cache
+     rows — mamba state is recurrent and MUST be reset; attention rows are
+     reset for hygiene, masking already hides stale rows);
+  2. assembles per-slot (token, position) inputs — prefill is teacher-forced
+     through the decode step at per-slot positions, so freshly admitted
+     requests replay their prompt while older slots keep generating
+     (continuous batching, no global barrier between requests);
+  3. runs the compiled step (greedy sampling inside the program) and feeds
+     the sampled tokens back to the scheduler, which finishes/evicts slots
+     and allocates pages crossed into.
+
+The engine is deliberately backend-agnostic: all placement decisions live in
+the step artifacts (plan + paging spec), so the same loop drives a fully
+HBM-resident cache or the host-paged one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.plan import MemoryPlan
+from repro.serve.paging import PagingSpec, cache_partition_bytes
+from repro.serve.scheduler import ContinuousScheduler, PagePool, Request
+
+
+@dataclasses.dataclass
+class EngineReport:
+    steps: int
+    generated_tokens: int
+    finished: dict[int, list[int]]
+    rejected: dict[int, list[int]]
+    evictions: int
+    wall_s: float
+    hbm_cache_bytes: int  # device-resident cache bytes (global)
+    host_cache_bytes: int  # host-resident cold pages (global)
+    resident_cache_bytes: int  # what the fully-resident layout would hold
+    drained: bool = True  # False: max_steps hit with requests in flight
+    pending: tuple[int, ...] = ()  # rids still queued/running at stop
+    truncated: tuple[int, ...] = ()  # rids finished by cache exhaustion
+
+    @property
+    def hbm_reduction(self) -> float:
+        """Resident-over-paged device cache footprint (>1 means paging
+        freed HBM)."""
+        return self.resident_cache_bytes / max(self.hbm_cache_bytes, 1)
+
+
+def _zero_slots(cache, mask: jax.Array):
+    """Zero every cache leaf's rows for slots where ``mask`` is True.
+
+    All decode-cache leaves carry the batch dim at axis 1 — (R, B, ...) —
+    for both resident and paged layouts.
+    """
+
+    def one(x):
+        m = mask.reshape((1, -1) + (1,) * (x.ndim - 2))
+        return jnp.where(m, jnp.zeros((), x.dtype), x)
+
+    return jax.tree.map(one, cache)
+
+
+class DecodeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        plan: MemoryPlan,
+        mesh,
+        shape: ShapeConfig,
+        params: Any,
+        *,
+        paging: PagingSpec | None = None,
+        own_params: bool = False,
+    ):
+        from repro.models import kvcache as KVC
+        from repro.train import step_builder as SB
+
+        self.cfg, self.shape, self.paging = cfg, shape, paging
+        self.art = SB.build_decode_step(cfg, plan, mesh, shape,
+                                        paging=paging, per_slot_pos=True)
+        # the step donates its state (the paged cold store must not double
+        # per step), so the engine owns the param buffers: place them per the
+        # plan and detach from the caller's copies unless ownership was
+        # explicitly handed over (own_params=True, the production path)
+        params = jax.tree.map(jax.device_put, params,
+                              self.art.state_shardings["params"])
+        if not own_params:
+            params = jax.tree.map(lambda x: x.copy(), params)
+        cache_sh = self.art.state_shardings["cache"]
+        if paging is None:
+            cache = KVC.init_cache(cfg, shape.global_batch, shape.seq_len)
+            cache = jax.tree.map(jax.device_put, cache, cache_sh)
+        else:
+            from repro.serve.paging import init_paged_cache
+
+            cache = init_paged_cache(cfg, shape.global_batch, shape.seq_len,
+                                     paging, shardings=cache_sh)
+        self.state = {"params": params, "cache": cache}
+        self._step = jax.jit(self.art.fn, donate_argnums=(0,))
+        # out_shardings keep the cold pages in host memory through the reset:
+        # without them the jitted zeroing would materialize the whole cold
+        # store in device memory (a full h2d+d2h round trip per admission,
+        # and an OOM whenever the cold store exceeds HBM — the exact regime
+        # paging exists for; invisible on CPU CI where host == device)
+        self._reset = jax.jit(_zero_slots, donate_argnums=(0,),
+                              out_shardings=cache_sh)
+        self._cache_sh = cache_sh
+
+        cache_len = KVC.cache_len(cfg, shape.seq_len)
+        page_size = paging.page_size if paging else cache_len
+        n_pages_per_slot = -(-cache_len // page_size)
+        self.scheduler = ContinuousScheduler(
+            n_slots=shape.global_batch,
+            pool=PagePool(n_pages_per_slot * shape.global_batch),
+            page_size=page_size,
+            cache_len=cache_len,
+            # ring caches (SWA) and O(1)-state models decode past the cache
+            # length by slot reuse; full attention runs out of slots there
+            allow_wrap=bool(cfg.sliding_window) or cfg.attention_free,
+        )
+
+    # -- one engine tick -----------------------------------------------------
+    def tick(self) -> None:
+        sched = self.scheduler
+        admitted = sched.admit()
+        if admitted:
+            mask = jnp.zeros((self.shape.global_batch,), bool)
+            mask = mask.at[jnp.asarray(admitted)].set(True)
+            self.state["cache"] = self._reset(self.state["cache"], mask)
+        toks, poss, _ = sched.step_inputs()
+        batch = {
+            "tokens": jnp.asarray(toks, jnp.int32)[:, None],
+            "pos": jnp.asarray(poss, jnp.int32),
+        }
+        self.state, nxt = self._step(self.state, batch)
+        sched.advance([int(t) for t in jax.device_get(nxt)])
+
+    def run(self, requests: Iterable[Request], max_steps: int = 10_000) -> EngineReport:
+        sched = self.scheduler
+        sched.submit(requests)
+        t0 = time.time()
+        steps = 0
+        while not sched.idle and steps < max_steps:
+            self.tick()
+            steps += 1
+        parts = cache_partition_bytes(
+            self.cfg, self.shape.global_batch, self.shape.seq_len, self.paging)
+        resident = cache_partition_bytes(
+            self.cfg, self.shape.global_batch, self.shape.seq_len, None)
+        pending = tuple(sorted(
+            {r.rid for r in sched.queue}
+            | {s.rid for s in sched.slots if s is not None}))
+        return EngineReport(
+            drained=sched.idle,
+            pending=pending,
+            truncated=tuple(sorted(sched.truncated)),
+            steps=steps,
+            generated_tokens=sum(len(v) for v in sched.finished.values()),
+            finished=dict(sched.finished),
+            rejected=dict(sched.rejected),
+            evictions=sched.evictions,
+            wall_s=time.time() - t0,
+            hbm_cache_bytes=parts["hbm"] + parts["transient"],
+            host_cache_bytes=parts["host"],
+            resident_cache_bytes=resident["hbm"],
+        )

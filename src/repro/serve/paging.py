@@ -1,0 +1,276 @@
+"""Page-table KV cache: hot window in HBM, cold pages in host memory.
+
+Each attention position's (B, S, n_kv, hd) decode cache is split along the
+sequence dimension into fixed-size pages. Two physical stores back it:
+
+  * ``k_hot``/``v_hot`` — an HBM ring of the last ``hot_window`` slots
+    (``n_hot`` pages). Every decoded token is written here at
+    ``slot % hot_window``, so the most recent pages are always servable
+    without touching the host link.
+  * ``k_cold``/``v_cold`` — the canonical full cache in host memory
+    (``compat.host_memory_kind``), written through every step (a one-token
+    update). Cold is always correct, which is what makes eviction implicit:
+    a hot ring row may be overwritten ``hot_window`` steps later without any
+    flush, because the canonical value already lives in cold.
+
+At attention time the per-layer full cache is reconstructed page by page
+inside the decode repeat scan (the serving twin of ``Run.lazy_gather``'s
+per-chunk weight gathers): pages inside the hot window are static slices of
+the HBM ring; pages outside it are fetched h2d with ``jax.device_put`` under
+``lax.cond``, double-buffered — each fetch is ordered after the page-before-
+last via ``optimization_barrier`` so at most two transfers are in flight and
+XLA cannot hoist the fetch pipeline out of the scan (the same anti-hoist
+rationale as ``models.model.gather_weights``).
+
+Exactness: the gathered cache equals the resident cache *elementwise on every
+attended slot*. Hot-ring rows belonging to masked slots may hold stale tokens
+(ring reuse), but the decode mask is additive ``NEG_INF`` — their softmax
+weight underflows to exactly 0.0 in fp32, so paged logits are bit-identical
+to resident logits (tests/test_serve_paging.py asserts zero difference).
+
+Mamba positions carry O(1) recurrent state and stay fully HBM-resident, as
+does encoder-decoder cross-attention K/V (prefill-computed, read-only).
+
+The ring-correctness invariant requires ``n_pages % n_hot == 0`` for
+sliding-window (ring) caches — a page and the hot slot it maps to must agree
+on which logical page is the most recently written one; ``choose_paging``
+enforces the divisibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import optimization_barrier
+from repro.configs.base import ModelConfig
+from repro.models import kvcache as KV
+
+
+@dataclasses.dataclass(frozen=True)
+class PagingSpec:
+    """Page geometry for one serve configuration.
+
+    ``n_hot`` counts hot (HBM-resident) pages; the remaining
+    ``n_pages - n_hot`` cold pages are what ``MemoryPlan.n_host`` records for
+    serve plans (core/serve_plan.py).
+    """
+
+    page_size: int  # tokens per page (P)
+    n_pages: int  # pages spanning the cache length
+    n_hot: int  # pages of the hot window (>= 1, divides n_pages)
+
+    def __post_init__(self):
+        assert self.page_size >= 1 and self.n_pages >= 1
+        assert 1 <= self.n_hot <= self.n_pages
+        assert self.n_pages % self.n_hot == 0, (
+            "hot window must tile the page ring (SWA ring-slot correctness)")
+
+    @property
+    def cache_len(self) -> int:
+        return self.page_size * self.n_pages
+
+    @property
+    def hot_window(self) -> int:
+        return self.page_size * self.n_hot
+
+    @property
+    def n_cold(self) -> int:
+        return self.n_pages - self.n_hot
+
+
+def choose_paging(cache_len: int, page_size: int, n_hot: int) -> PagingSpec:
+    """Clamp (page_size, n_hot) to a valid spec for ``cache_len``.
+
+    page_size is reduced to the largest divisor of ``cache_len`` not
+    exceeding the request; n_hot to the largest divisor of the resulting
+    page count. Keeps planner searches total — every request maps to some
+    legal geometry.
+    """
+    page_size = max(1, min(page_size, cache_len))
+    while cache_len % page_size:
+        page_size -= 1
+    n_pages = cache_len // page_size
+    n_hot = max(1, min(n_hot, n_pages))
+    while n_pages % n_hot:
+        n_hot -= 1
+    return PagingSpec(page_size=page_size, n_pages=n_pages, n_hot=n_hot)
+
+
+# ---------------------------------------------------------------------------
+# Paged cache pytrees
+# ---------------------------------------------------------------------------
+def paged_cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                      spec: PagingSpec) -> dict:
+    """ShapeDtypeStruct pytree for the paged decode cache.
+
+    Attention positions split into hot ring + cold store; mamba (and encdec
+    cross-attention) entries are identical to the resident layout.
+    """
+    base = KV.cache_specs(cfg, batch, seq_len)
+    assert spec.cache_len == KV.cache_len(cfg, seq_len), (
+        f"paging spec covers {spec.cache_len} slots, cache has "
+        f"{KV.cache_len(cfg, seq_len)}")
+    out: dict[str, Any] = {}
+    for pos, entry in base.items():
+        if "k" not in entry:
+            out[pos] = dict(entry)
+            continue
+        kv = entry["k"]  # (R, B, S, n_kv, hd)
+        r, b, _, n_kv, hd = kv.shape
+        hot = jax.ShapeDtypeStruct((r, b, spec.hot_window, n_kv, hd), kv.dtype)
+        new = {"k_hot": hot, "v_hot": hot, "k_cold": kv, "v_cold": kv}
+        for extra in ("xk", "xv"):  # encdec cross-attention stays resident
+            if extra in entry:
+                new[extra] = entry[extra]
+        out[pos] = new
+    return out
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                     spec: PagingSpec, shardings=None):
+    """Zeros matching ``paged_cache_specs``; ``shardings`` (same pytree of
+    NamedSharding) places cold leaves in host memory."""
+    specs = paged_cache_specs(cfg, batch, seq_len, spec)
+    zeros = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    if shardings is None:
+        return zeros
+    return jax.tree.map(jax.device_put, zeros, shardings)
+
+
+def paged_to_resident(cache: dict) -> dict:
+    """Resident-layout view of a paged cache (cold is canonical)."""
+    out = {}
+    for pos, entry in cache.items():
+        if "k_cold" not in entry:
+            out[pos] = dict(entry)
+            continue
+        new = {"k": entry["k_cold"], "v": entry["v_cold"]}
+        for extra in ("xk", "xv"):
+            if extra in entry:
+                new[extra] = entry[extra]
+        out[pos] = new
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode-time cache I/O (the kv_io hook of models.kvcache.decode_step)
+# ---------------------------------------------------------------------------
+class PagedKV:
+    """Paged cache I/O for one decode step.
+
+    ``fetch_sharding`` (optional NamedSharding of one fetched page,
+    device-memory) makes the h2d fetch an explicit op inside the scan; when
+    None the transfer is left to XLA's memory-space propagation (tests that
+    construct PagedKV without a mesh).
+    """
+
+    entry_keys = ("k_hot", "v_hot", "k_cold", "v_cold")
+
+    def __init__(self, spec: PagingSpec, fetch_sharding=None):
+        self.spec = spec
+        self.fetch_sharding = fetch_sharding
+
+    # -- page residency -----------------------------------------------------
+    def _page_is_hot(self, wp: jax.Array, p: int, sliding: bool) -> jax.Array:
+        """Is logical page ``p`` servable from the hot ring at write page
+        ``wp``? Scalar bool; per-slot write pages reduce with ALL (a page is
+        fetched unless hot for every batch row).
+
+        Full attention: the last ``n_hot`` pages including the current write
+        page (its unwritten rows are masked, so stale ring content there is
+        invisible). Sliding-window ring caches differ in steady state: every
+        cache slot is *valid*, and the current write page's not-yet-rewritten
+        slots hold values from one ring cycle ago — older than the hot
+        window — so only the ``n_hot - 1`` most recent *fully written* pages
+        are servable; the write page itself always comes from cold.
+        """
+        s = self.spec
+        if sliding:
+            d = (wp - p) % s.n_pages
+            hot = (d >= 1) & (d < s.n_hot)
+        else:
+            hot = (wp >= p) & (wp - p < s.n_hot)
+        return jnp.all(hot)
+
+    def _gather(self, hot: jax.Array, cold: jax.Array, wp: jax.Array,
+                sliding: bool) -> jax.Array:
+        """Reconstruct the full (B, S, n_kv, hd) cache from hot ring + cold
+        pages, double-buffered prefetch ordering on the cold fetches."""
+        s = self.spec
+        P = s.page_size
+        pages: list[jax.Array] = []
+        for p in range(s.n_pages):
+            row0 = (p % s.n_hot) * P
+            hot_rows = jax.lax.slice_in_dim(hot, row0, row0 + P, axis=1)
+            cold_rows = jax.lax.slice_in_dim(cold, p * P, (p + 1) * P, axis=1)
+            if len(pages) >= 2:
+                # double buffer: this fetch may start only once the
+                # page-before-last materialized (≤ 2 transfers in flight),
+                # and the barrier pins the pipeline inside the repeat scan
+                cold_rows, _ = optimization_barrier((cold_rows, pages[-2]))
+            fetch = self.fetch_sharding
+
+            def from_cold(h, c, _sh=fetch):
+                return c if _sh is None else jax.device_put(c, _sh)
+
+            pages.append(jax.lax.cond(
+                self._page_is_hot(wp, p, sliding),
+                lambda h, c: h, from_cold, hot_rows, cold_rows))
+        return jnp.concatenate(pages, axis=1)
+
+    # -- the kv_io hook -------------------------------------------------------
+    def update_and_fetch(self, entry: dict, k: jax.Array, v: jax.Array,
+                         pos: jax.Array, cfg: ModelConfig):
+        s = self.spec
+        s_kv = entry["k_cold"].shape[1]
+        assert s_kv == s.cache_len, (s_kv, s.cache_len)
+        sliding = bool(cfg.sliding_window)
+        slot = pos % s_kv if sliding else pos
+        # write-through: hot ring at slot % W, canonical cold at slot
+        hot_k = KV.write_slot(entry["k_hot"], k, slot % s.hot_window)
+        hot_v = KV.write_slot(entry["v_hot"], v, slot % s.hot_window)
+        cold_k = KV.write_slot(entry["k_cold"], k, slot)
+        cold_v = KV.write_slot(entry["v_cold"], v, slot)
+        wp = slot // s.page_size
+        full_k = self._gather(hot_k, cold_k, wp, sliding)
+        full_v = self._gather(hot_v, cold_v, wp, sliding)
+        mask = KV.decode_mask(pos, s_kv, sliding)
+        new_entry = {"k_hot": hot_k, "v_hot": hot_v,
+                     "k_cold": cold_k, "v_cold": cold_v}
+        return full_k, full_v, mask, new_entry
+
+
+# ---------------------------------------------------------------------------
+# Accounting (serve_plan / examples / fidelity rows)
+# ---------------------------------------------------------------------------
+def cache_partition_bytes(cfg: ModelConfig, batch: int, seq_len: int,
+                          spec: PagingSpec | None) -> dict[str, int]:
+    """Global bytes of the decode cache by residence tier.
+
+    Keys: ``hbm`` (hot rings + mamba/cross-attn state), ``host`` (cold
+    pages), ``transient`` (one attention position's gathered full cache —
+    the largest per-layer reconstruction live during its attention). A
+    ``spec`` of None prices the resident layout (everything hbm, no
+    transient).
+    """
+    base = KV.cache_specs(cfg, batch, seq_len)
+    hbm = host = transient = 0
+    for entry in base.values():
+        for name, sd in entry.items():
+            nbytes = 1
+            for d in sd.shape:
+                nbytes *= d
+            nbytes *= sd.dtype.itemsize
+            if spec is None or name not in ("k", "v"):
+                hbm += nbytes
+                continue
+            hbm += nbytes * spec.n_hot // spec.n_pages  # hot ring
+            host += nbytes  # canonical cold store
+            # per-repeat gathered reconstruction: (B, S, kv, hd) x {k, v}
+            transient = max(transient, 2 * nbytes // sd.shape[0])
+    return {"hbm": hbm, "host": host, "transient": transient if spec else 0}

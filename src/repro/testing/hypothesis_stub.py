@@ -9,7 +9,7 @@ reproducible random-example engine.
 
 Scope: exactly the surface the suite imports — ``given``, ``settings``,
 ``assume`` and ``strategies.{integers, lists, sampled_from, text, floats,
-booleans, just, data}``. Draws are seeded per test name, so failures
+booleans, just, tuples, data}``. Draws are seeded per test name, so failures
 reproduce across runs; the first example of every integer strategy pins the
 lower bound and the second the upper, so boundary cases are always exercised.
 This is NOT a shrinking property-based engine; with real hypothesis installed
@@ -135,6 +135,13 @@ def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=None) -> Se
     return SearchStrategy(draw, "text")
 
 
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng, i: tuple(s.example_from(rng, i) for s in strategies),
+        "tuples",
+    )
+
+
 def data() -> SearchStrategy:
     return _DataStrategy()
 
@@ -195,7 +202,7 @@ def install() -> types.ModuleType:
     this = sys.modules[__name__]
     strategies = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "just", "sampled_from",
-                 "lists", "text", "data"):
+                 "lists", "text", "tuples", "data"):
         setattr(strategies, name, getattr(this, name))
     strategies.SearchStrategy = SearchStrategy
     this.strategies = strategies

@@ -612,15 +612,40 @@ def build_serve_params(cfg: ModelConfig, plan: MemoryPlan, mesh):
     return p_defs, p_shard, gather, fetch
 
 
-def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConfig) -> StepArtifacts:
+def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConfig,
+                      *, paging=None, per_slot_pos: bool = False) -> StepArtifacts:
+    """Decode step for a serve plan.
+
+    ``paging`` (a ``serve.paging.PagingSpec``) switches the attention caches
+    to the paged layout: hot rings stay in HBM, the canonical cold pages live
+    in host memory (``compat.host_memory_kind``), and the step reconstructs
+    each layer's cache page-wise inside the repeat scan through the
+    ``PagedKV`` kv_io hook — the serving twin of ``Run.lazy_gather``. When
+    ``plan.n_host > 0`` and no spec is passed, one is derived via
+    ``serve_plan.paging_from_plan``. ``per_slot_pos`` widens the ``pos``
+    input to (B,) so every batch slot decodes at its own position
+    (continuous batching)."""
+    from repro.compat import host_memory_kind
+
+    if paging is None and plan.n_host > 0 and plan.n_persist == plan.n_chunks:
+        from repro.core.serve_plan import paging_from_plan
+
+        paging = paging_from_plan(cfg, shape, plan)
+
     p_defs, p_shard, gather, fetch = build_serve_params(cfg, plan, mesh)
     sharder = SH.make_activation_sharder(mesh, plan)
     bsz = shape.global_batch
 
-    cache_spec_tree = KV.cache_specs(cfg, bsz, shape.seq_len)
+    if paging is None:
+        cache_spec_tree = KV.cache_specs(cfg, bsz, shape.seq_len)
+    else:
+        from repro.serve.paging import paged_cache_specs
+
+        cache_spec_tree = paged_cache_specs(cfg, bsz, shape.seq_len, paging)
     ba = SH.batch_axes(mesh)
     tp = "model" if "model" in mesh.axis_names else None
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    host_kind = host_memory_kind(mesh)
 
     def fits(dim: int, axes) -> bool:
         if axes is None:
@@ -634,16 +659,22 @@ def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConf
     def cache_sharding(name: str, s: jax.ShapeDtypeStruct) -> NamedSharding:
         """Attention caches (R,B,S,kv,hd): batch over ZeRO axes when divisible;
         the sequence dim takes TP (and absorbs the ZeRO axes too for
-        single-sequence long-context decode, where batch cannot shard)."""
+        single-sequence long-context decode, where batch cannot shard).
+        Paged leaves reuse the same geometry — hot rings and cold pages are
+        slot-axis slices of the resident layout — with cold pinned to the
+        platform's host memory kind."""
         shp = s.shape
         batch_ax = ba if fits(shp[1], ba) else None
-        if name in ("k", "v", "xk", "xv"):
+        if name in ("k", "v", "xk", "xv", "k_hot", "v_hot", "k_cold", "v_cold"):
             seq_ax = tp if batch_ax is not None else tuple(
                 a for a in ((ba or ()) + ((tp,) if tp else ())) if a
             ) or None
             if not fits(shp[2], seq_ax):
                 seq_ax = tp if fits(shp[2], tp) else None
-            return NamedSharding(mesh, P(None, batch_ax, seq_ax, None, None))
+            spec = P(None, batch_ax, seq_ax, None, None)
+            if name in ("k_cold", "v_cold") and host_kind is not None:
+                return NamedSharding(mesh, spec, memory_kind=host_kind)
+            return NamedSharding(mesh, spec)
         if name == "conv":  # (R, B, K, conv_dim)
             ch = tp if fits(shp[3], tp) else None
             return NamedSharding(mesh, P(None, batch_ax, None, ch))
@@ -667,20 +698,48 @@ def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConf
         "params": SH.tree_specs(p_defs, p_shard),
         "cache": cache_sds,
     }
+    pos_spec = (jax.ShapeDtypeStruct((bsz,), jnp.int32) if per_slot_pos
+                else jax.ShapeDtypeStruct((), jnp.int32))
     batch_specs = {
         "tokens": jax.ShapeDtypeStruct(
             (bsz, 1), jnp.int32, sharding=NamedSharding(mesh, P(tok_batch_ax, None))
         ),
-        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "pos": pos_spec,
     }
+
+    kv_io = None
+    host_pin = None
+    if paging is not None:
+        from repro.serve.paging import PagedKV
+
+        # one fetched page, per repeat: (B, P, n_kv, hd), batch-sharded,
+        # device memory — the h2d target of the cold-page device_put
+        page_batch_ax = ba if fits(bsz, ba) else None
+        fetch_sharding = NamedSharding(mesh, P(page_batch_ax, None, None, None))
+        kv_io = PagedKV(paging, fetch_sharding=fetch_sharding)
+        # the repeat scan re-emits cold leaves in device memory; pin them back
+        host_pin = {
+            pos: {name: sh for name, sh in entry.items()
+                  if name in ("k_cold", "v_cold")}
+            for pos, entry in cache_shard.items()
+        }
 
     def step_fn(state, batch):
         M.set_activation_sharder(sharder)
         fparams = fetch(state["params"])
         logits, new_cache = KV.decode_step(
             fparams, state["cache"], batch["tokens"], batch["pos"], cfg,
-            gather_specs=gather,
+            gather_specs=gather, kv_io=kv_io,
         )
+        if host_pin is not None:
+            new_cache = {
+                pos: {
+                    name: (jax.device_put(leaf, host_pin[pos][name])
+                           if name in host_pin[pos] else leaf)
+                    for name, leaf in entry.items()
+                }
+                for pos, entry in new_cache.items()
+            }
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return {"params": state["params"], "cache": new_cache}, next_tok
 
