@@ -49,7 +49,7 @@ def get_plan(arch, shape_name, variant: str):
     raise KeyError(variant)
 
 
-def run(cell: str, variant: str, out_path: str):
+def run(cell: str, variant: str, out_path: str | None):
     from repro.launch.dryrun import run_cell
 
     arch, shape = CELLS[cell]
@@ -58,8 +58,9 @@ def run(cell: str, variant: str, out_path: str):
     rec["variant"] = variant
     rec["modeled_t_iter"] = res.runtime.t_iteration
     rec["modeled_feasible"] = res.feasible
-    with open(out_path, "a") as f:
-        f.write(json.dumps(rec) + "\n")
+    if out_path is not None:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
     rl = rec["roofline"]
     print(f"[hillclimb] {cell}/{variant}: plan={rec['plan']}")
     print(f"  comp={rl['t_compute_s']:.3f}s mem={rl['t_memory_s']:.3f}s "
@@ -68,12 +69,45 @@ def run(cell: str, variant: str, out_path: str):
     return rec
 
 
+def bench_out(path: str, cell: str = "stablelm"):
+    """CI artifact mode: recompile the cell's excluded-move baseline and
+    accepted-best plans and emit ``BENCH_train.json`` — roofline terms,
+    XLA buffer assignment, and modeled iteration time per variant, plus the
+    modeled speedup. Plan search and roofline are deterministic; the
+    lower/compile wall-time fields jitter run to run."""
+    arch, shape = CELLS[cell]
+    variants = {v: run(cell, v, None) for v in ("baseline", "best")}
+    bench = {
+        "bench": "train_hillclimb",
+        "cell": cell,
+        "arch": arch,
+        "shape": shape,
+        "variants": variants,
+        "modeled_speedup": (variants["baseline"]["modeled_t_iter"]
+                            / max(variants["best"]["modeled_t_iter"], 1e-12)),
+    }
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    print(f"[hillclimb] wrote {path} "
+          f"(modeled speedup x{bench['modeled_speedup']:.3f})")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
-    ap.add_argument("--iter", required=True)
+    ap.add_argument("--cell", choices=sorted(CELLS))
+    ap.add_argument("--iter")
     ap.add_argument("--out", default="reports/hillclimb.jsonl")
+    ap.add_argument("--bench-out", metavar="PATH",
+                    help="emit a baseline-vs-best BENCH_train.json for the "
+                         "--cell (default stablelm) instead of appending a "
+                         "single hillclimb iteration")
     args = ap.parse_args()
+    if args.bench_out:
+        bench_out(args.bench_out, cell=args.cell or "stablelm")
+        return
+    if not args.cell or not args.iter:
+        ap.error("--cell and --iter are required without --bench-out")
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     run(args.cell, args.iter, args.out)
 

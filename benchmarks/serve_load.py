@@ -1,0 +1,240 @@
+"""Request-level serving load harness: seeded arrivals, latency percentiles.
+
+Drives the decode engine with a seeded Poisson request stream (mixed
+prompt/output lengths: mostly short prompts plus a long tail) under each
+admission mode and emits ``BENCH_serve.json``:
+
+  * ``replay``  — legacy teacher-forced prefill, one prompt token per tick;
+  * ``whole``   — chunked-prefill program run to completion per prompt (the
+    stall-heavy baseline: in-flight streams wait out every chunk);
+  * ``chunked`` — cost-model-sized chunks interleaved with decode ticks
+    (at most ``chunk_budget`` consecutive prefill calls per stall).
+
+Per mode: p50/p99 request latency, p50/p99 TTFT, p99 inter-token latency,
+aggregate tokens/sec, tick counts, and a sha256 checksum of the finished
+token streams. Greedy decode is deterministic, so the checksum and tick
+counts are reproducible for a fixed seed (and equal ACROSS modes — the
+prefill dataflow is bitwise-identical to replay); the wall-clock fields are
+the measurement and naturally jitter.
+
+    PYTHONPATH=src python benchmarks/serve_load.py --smoke --out BENCH_serve.json
+
+``--smoke`` additionally gates (exit 1 on failure): all modes drain, token
+checksums agree across modes, chunked admission beats whole-prompt admission
+on p99 inter-token latency, and a second chunked run reproduces the first
+(checksum + tick counts).
+"""
+import argparse
+import hashlib
+import json
+import random
+import sys
+
+from repro.compat import ensure_jax_compat
+
+ensure_jax_compat()
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.configs.base import ShapeConfig  # noqa: E402
+from repro.core.plan import MemoryPlan  # noqa: E402
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+from repro.models import kvcache as KV  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.serve import DecodeEngine, Request, choose_paging  # noqa: E402
+
+MODES = ("replay", "whole", "chunked")
+
+
+def build_workload(seed: int, n_requests: int, vocab: int, *,
+                   mean_gap_ticks: float = 3.0, long_frac: float = 0.3,
+                   short_prompt=(3, 8), long_prompt=(24, 44),
+                   max_new=(4, 12)) -> list[tuple[int, Request]]:
+    """Seeded (arrival_tick, Request) stream: Poisson arrivals (exponential
+    inter-arrival gaps, floored to engine ticks), 70/30 short/long prompts,
+    uniform output lengths. Same seed -> same stream, so every mode (and
+    every rerun) serves identical work."""
+    rng = random.Random(seed)
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += rng.expovariate(1.0 / mean_gap_ticks)
+        lo, hi = long_prompt if rng.random() < long_frac else short_prompt
+        prompt = [rng.randrange(1, vocab) for _ in range(rng.randint(lo, hi))]
+        out.append((int(t), Request(rid, prompt, rng.randint(*max_new))))
+    return out
+
+
+def drive(engine: DecodeEngine, arrivals: list[tuple[int, Request]],
+          max_steps: int = 5000):
+    """Tick the engine against the arrival schedule: submit every request
+    whose arrival tick has passed, fast-forward over idle gaps (no busy
+    ticks between bursts), and drain. Returns the engine report."""
+    pending = sorted(arrivals, key=lambda a: a[0])
+    tick = steps = 0
+    while (pending or not engine.scheduler.idle) and steps < max_steps:
+        while pending and pending[0][0] <= tick:
+            engine.submit([pending.pop(0)[1]])
+        if engine.scheduler.idle:
+            tick = pending[0][0]
+            continue
+        engine.step_once()
+        tick += 1
+        steps += 1
+    return engine.report()
+
+
+def token_checksum(report) -> str:
+    """sha256 over the finished/rejected token streams (sorted by rid) —
+    the deterministic identity of a run."""
+    payload = json.dumps({
+        "finished": sorted((rid, toks) for rid, toks in report.finished.items()),
+        "rejected": sorted((rid, toks) for rid, toks in report.rejected.items()),
+        "truncated": sorted(report.truncated),
+    }, separators=(",", ":"))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def run_mode(mode: str, cfg, plan, mesh, shape, params, paging, arrivals,
+             chunk: int | None, max_steps: int) -> dict:
+    engine = DecodeEngine(cfg, plan, mesh, shape, params, paging=paging,
+                          admission=mode,
+                          prefill_chunk=None if mode == "replay" else chunk)
+    engine.warmup()  # compile outside the measured window
+    report = drive(engine, arrivals, max_steps=max_steps)
+    return {
+        "admission": report.admission,
+        "prefill_chunk": report.prefill_chunk,
+        "drained": report.drained,
+        # deterministic for a fixed seed (greedy decode, seeded stream)
+        "token_checksum": token_checksum(report),
+        "steps": report.steps,
+        "prefill_ticks": report.prefill_ticks,
+        "decode_ticks": report.decode_ticks,
+        "generated_tokens": report.generated_tokens,
+        "finished_requests": len(report.finished),
+        "evictions": report.evictions,
+        "truncated": len(report.truncated),
+        "rejected": len(report.rejected),
+        # wall-clock measurements (jitter run to run)
+        "wall_s": round(report.wall_s, 6),
+        "tokens_per_s": round(
+            report.generated_tokens / max(report.wall_s, 1e-9), 3),
+        "p50_latency_s": round(report.p50_latency_s, 6),
+        "p99_latency_s": round(report.p99_latency_s, 6),
+        "p50_ttft_s": round(report.p50_ttft_s, 6),
+        "p99_ttft_s": round(report.p99_ttft_s, 6),
+        "p99_itl_s": round(report.p99_itl_s, 6),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-405b")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--hot-pages", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prefill chunk size for whole/chunked modes "
+                         "(0 = cost-model choice)")
+    ap.add_argument("--max-steps", type=int, default=5000)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate: drained, cross-mode checksum equality, "
+                         "chunked p99 ITL < whole p99 ITL, and a second "
+                         "chunked run reproducing the first")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    mesh = make_local_mesh()
+    shape = ShapeConfig("serve_load", args.seq_len, args.batch_slots, "decode")
+    s_kv = KV.cache_len(cfg, args.seq_len)
+    paging = choose_paging(s_kv, args.page_size, args.hot_pages)
+    nc, nb = 3, 2
+    plan = MemoryPlan(nc, nb, n_persist=nc, n_host=paging.n_cold)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    chunk = args.chunk if args.chunk > 0 else None
+
+    workload = build_workload(args.seed, args.requests, cfg.vocab_size)
+    print(f"[serve_load] {args.arch} seed={args.seed}: "
+          f"{len(workload)} requests over {workload[-1][0]} ticks, "
+          f"prompts {min(len(r.prompt_tokens) for _, r in workload)}-"
+          f"{max(len(r.prompt_tokens) for _, r in workload)} tokens, "
+          f"paged cache ({paging.n_cold} cold pages -> host)")
+
+    modes = {}
+    for mode in MODES:
+        arrivals = build_workload(args.seed, args.requests, cfg.vocab_size)
+        modes[mode] = run_mode(mode, cfg, plan, mesh, shape, params, paging,
+                               arrivals, chunk, args.max_steps)
+        m = modes[mode]
+        print(f"[serve_load] {mode:>7}: {m['generated_tokens']} tok "
+              f"in {m['steps']} ticks ({m['prefill_ticks']} prefill / "
+              f"{m['decode_ticks']} decode), {m['tokens_per_s']:.1f} tok/s, "
+              f"p50/p99 latency {m['p50_latency_s']:.4f}/"
+              f"{m['p99_latency_s']:.4f}s, p99 TTFT {m['p99_ttft_s']:.4f}s, "
+              f"p99 ITL {m['p99_itl_s']:.4f}s")
+
+    comparison = {
+        "chunked_lt_whole_p99_itl":
+            modes["chunked"]["p99_itl_s"] < modes["whole"]["p99_itl_s"],
+        "checksums_agree":
+            len({m["token_checksum"] for m in modes.values()}) == 1,
+    }
+    bench = {
+        "bench": "serve_load",
+        "seed": args.seed,
+        "arch": args.arch,
+        "workload": {
+            "requests": args.requests,
+            "seq_len": args.seq_len,
+            "batch_slots": args.batch_slots,
+            "page_size": args.page_size,
+            "hot_pages": args.hot_pages,
+            "chunk": chunk,
+            "arrival_ticks": [t for t, _ in workload],
+            "prompt_lens": [len(r.prompt_tokens) for _, r in workload],
+            "max_new": [r.max_new_tokens for _, r in workload],
+        },
+        "modes": modes,
+        "comparison": comparison,
+    }
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    print(f"[serve_load] wrote {args.out}")
+
+    if args.smoke:
+        failures = []
+        for mode, m in modes.items():
+            if not m["drained"]:
+                failures.append(f"{mode} did not drain in {m['steps']} ticks")
+        if not comparison["checksums_agree"]:
+            failures.append("token checksums differ across admission modes")
+        if not comparison["chunked_lt_whole_p99_itl"]:
+            failures.append(
+                f"chunked p99 ITL {modes['chunked']['p99_itl_s']}s not below "
+                f"whole-prompt {modes['whole']['p99_itl_s']}s")
+        rerun = run_mode("chunked", cfg, plan, mesh, shape, params, paging,
+                         build_workload(args.seed, args.requests, cfg.vocab_size),
+                         chunk, args.max_steps)
+        for key in ("token_checksum", "steps", "prefill_ticks",
+                    "decode_ticks", "generated_tokens"):
+            if rerun[key] != modes["chunked"][key]:
+                failures.append(f"chunked rerun not deterministic: {key} "
+                                f"{rerun[key]} != {modes['chunked'][key]}")
+        if failures:
+            for f_ in failures:
+                print(f"[serve_load] FAIL: {f_}", file=sys.stderr)
+            return 1
+        print("[serve_load] smoke OK: drained, checksums agree, chunked "
+              "p99 ITL below whole-prompt, rerun deterministic")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

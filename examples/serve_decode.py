@@ -1,53 +1,54 @@
-"""Batched serving demo: prefill a prompt batch, then decode with the
-plan-sharded KV cache — the serve-side of the framework.
+"""Streaming serving demo: submit a prompt batch to the decode engine and
+consume tokens as ``TokenEvent``s while requests are still in flight.
 
     PYTHONPATH=src python examples/serve_decode.py
+
+Prompts enter the cache through the chunked-prefill program (one compiled
+``lax.scan`` of decode steps per chunk — see docs/serving.md §5) interleaved
+with decode ticks, so the first request starts streaming before the last
+prompt has finished ingesting. Compare examples/serve_lm.py, which drives
+``run()`` to completion and reports aggregate latency percentiles.
 """
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config, reduced
-from repro.configs.base import ShapeConfig
-from repro.core.plan import MemoryPlan
-from repro.launch.mesh import make_local_mesh
-from repro.models import kvcache as KV
-from repro.models import model as M
-from repro.train.step_builder import build_decode_step
+from repro.compat import ensure_jax_compat
+
+ensure_jax_compat()
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.configs.base import ShapeConfig  # noqa: E402
+from repro.core.plan import MemoryPlan  # noqa: E402
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.serve import DecodeEngine, Request  # noqa: E402
+
+B, PROMPT, GEN = 4, 32, 16
 
 cfg = reduced(get_config("mixtral-8x22b"))
-B, PROMPT, GEN = 4, 32, 32
 mesh = make_local_mesh()
-plan = MemoryPlan(n_chunks=4, n_blocks=2, n_persist=4)
 shape = ShapeConfig("serve", PROMPT + GEN, B, "decode")
+plan = MemoryPlan(n_chunks=4, n_blocks=2, n_persist=4)
 
 params = M.init_params(cfg, jax.random.PRNGKey(0))
-# serving layout: canonical stacked blocks (same tree the decode step expects)
-art = build_decode_step(cfg, plan, mesh, shape)
-step = jax.jit(art.fn, donate_argnums=(0,))
+engine = DecodeEngine(cfg, plan, mesh, shape, params)
 
-prompt = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0, cfg.vocab_size)
-cache = KV.init_cache(cfg, B, PROMPT + GEN)
-state = {"params": params, "cache": cache}
-
-# prefill = teacher-forced decode over the prompt (simple and correct; a
-# production server would use build_prefill_step to batch this)
-t0 = time.time()
-tok = prompt[:, :1]
-for t in range(PROMPT):
-    state, nxt = step(state, {"tokens": prompt[:, t:t + 1], "pos": jnp.int32(t)})
-print(f"prefill {PROMPT} tokens x {B} seqs: {time.time()-t0:.2f}s")
+prompts = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 1, cfg.vocab_size)
+engine.submit([Request(i, [int(t) for t in prompts[i]], GEN) for i in range(B)])
 
 t0 = time.time()
-generated = [nxt[:, None]]
-tok = nxt[:, None]
-for t in range(PROMPT, PROMPT + GEN - 1):
-    state, nxt = step(state, {"tokens": tok, "pos": jnp.int32(t)})
-    tok = nxt[:, None]
-    generated.append(tok)
-out = jnp.concatenate(generated, axis=1)
-dt = time.time() - t0
-print(f"decoded {GEN} tokens x {B} seqs in {dt:.2f}s "
-      f"({B * GEN / dt:.1f} tok/s on CPU interpret)")
-print("sample token ids:", out[0, :16].tolist())
+streams: dict[int, list[int]] = {}
+for ev in engine.stream():
+    streams.setdefault(ev.rid, []).append(ev.token)
+    if ev.finished:
+        print(f"req {ev.rid} finished at +{time.time() - t0:.2f}s "
+              f"({len(streams[ev.rid])} tokens)")
+
+report = engine.report()
+dt = max(report.wall_s, 1e-9)
+print(f"decoded {report.generated_tokens} tokens x {B} seqs in {dt:.2f}s "
+      f"({report.generated_tokens / dt:.1f} tok/s on CPU; "
+      f"{report.prefill_ticks} prefill chunks of {report.prefill_chunk}, "
+      f"{report.decode_ticks} decode ticks)")
+print("sample token ids:", streams[0][:16])

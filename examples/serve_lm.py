@@ -11,6 +11,10 @@ point: long-context decode stops being bounded by HBM.
 ``--plan resident`` runs the fully HBM-resident baseline; ``--plan paged``
 forces the page-table cache; CI runs both as the serve-paged-parity gate
 (the sampled tokens must match across plans for identical request streams).
+``--admission`` picks how prompts enter the cache: ``chunked`` (default for
+attentive configs) interleaves prefill chunks with decode ticks, ``whole``
+runs each prompt's prefill to completion, ``replay`` teacher-forces the
+prompt one token per tick (default for attention-free configs).
 """
 import argparse
 
@@ -46,6 +50,13 @@ def main() -> int:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--hot-pages", type=int, default=2)
+    ap.add_argument("--admission", default="auto",
+                    choices=["auto", "replay", "chunked", "whole"],
+                    help="prompt ingestion: chunked prefill interleaved "
+                         "with decode (default for attentive configs), "
+                         "whole-prompt prefill, or teacher-forced replay")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="override the cost-model prefill chunk size")
     ap.add_argument("--compiled-memory", action="store_true",
                     help="also AOT-compile the step to report XLA's per-"
                          "device argument bytes (a second full compile)")
@@ -70,7 +81,10 @@ def main() -> int:
         print(f"[serve_lm] resident: full {s_kv}-token cache in HBM")
 
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    engine = DecodeEngine(cfg, plan, mesh, shape, params, paging=paging)
+    engine = DecodeEngine(
+        cfg, plan, mesh, shape, params, paging=paging,
+        admission=None if args.admission == "auto" else args.admission,
+        prefill_chunk=args.prefill_chunk or None)
 
     dev_args = None
     if args.compiled_memory:
@@ -79,13 +93,20 @@ def main() -> int:
         mem = engine.art.lower(donate=False).compile().memory_analysis()
         dev_args = mem.argument_size_in_bytes
 
-    report = engine.run(build_requests(args.requests, cfg.vocab_size, args.max_new))
+    engine.submit(build_requests(args.requests, cfg.vocab_size, args.max_new))
+    report = engine.run()
     tok_s = report.generated_tokens / max(report.wall_s, 1e-9)
     print(f"[serve_lm] served {len(report.finished)} requests, "
           f"{report.generated_tokens} tokens in {report.steps} steps "
-          f"({tok_s:.1f} tok/s, evictions={report.evictions}"
+          f"({report.prefill_ticks} prefill / {report.decode_ticks} decode, "
+          f"admission={report.admission}"
+          + (f", chunk={report.prefill_chunk}" if report.prefill_chunk else "")
+          + f"; {tok_s:.1f} tok/s, evictions={report.evictions}"
           + ("" if report.drained else f", STOPPED with pending={report.pending}")
           + ")")
+    print(f"[serve_lm] latency p50/p99 {report.p50_latency_s:.4f}/"
+          f"{report.p99_latency_s:.4f}s, TTFT p50/p99 {report.p50_ttft_s:.4f}/"
+          f"{report.p99_ttft_s:.4f}s, p99 ITL {report.p99_itl_s:.4f}s")
     for rid in sorted(report.finished):
         print(f"  req {rid}: {report.finished[rid]}")
     hbm_dev = report.hbm_cache_bytes / n_dev

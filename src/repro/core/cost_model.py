@@ -447,6 +447,46 @@ def t_decode_compute(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     return max(hw.matmul_time(flops), hw.hbm_time(read))
 
 
+# A prefill chunk interleaved into the decode loop stalls in-flight streams
+# for its whole runtime: budget it at this many decode-step windows so the
+# added inter-token latency stays bounded (the scheduler enforces at most
+# one consecutive prefill tick on top — serve/scheduler.py:should_prefill).
+PREFILL_STALL_BUDGET_STEPS = 8
+
+
+def t_prefill_chunk(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                    hw: HardwareSpec, chunk: int, spec=None) -> float:
+    """Runtime of one chunked-prefill call ingesting ``chunk`` tokens/slot.
+
+    The chunk program is a scan of ``chunk`` single-token decode steps
+    (serve/prefill.py), so its cost is the decode-step window — compute vs.
+    cold-page fetch, whichever dominates on a paged plan — times the chunk
+    length. Priced next to ``t_page_fetch`` so the planner reasons about
+    admission latency and fetch drain with one vocabulary."""
+    per_tok = t_decode_compute(cfg, shape, mesh, hw)
+    if spec is not None:
+        per_tok = max(per_tok, t_page_fetch(cfg, shape, mesh, hw, spec))
+    return chunk * per_tok
+
+
+def choose_prefill_chunk(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                         hw: HardwareSpec, spec=None,
+                         max_chunk: int | None = None) -> int:
+    """Largest prefill chunk whose runtime fits the decode-latency budget
+    (``PREFILL_STALL_BUDGET_STEPS`` decode windows), clamped to
+    [1, max_chunk]. Bigger chunks amortize per-call dispatch but each call
+    stalls in-flight decode streams for ``t_prefill_chunk``; the budget caps
+    that stall at a bounded number of inter-token latencies."""
+    per_tok = t_decode_compute(cfg, shape, mesh, hw)
+    if spec is not None:
+        per_tok = max(per_tok, t_page_fetch(cfg, shape, mesh, hw, spec))
+    budget = PREFILL_STALL_BUDGET_STEPS * t_decode_compute(cfg, shape, mesh, hw)
+    chunk = max(1, int(budget / per_tok)) if per_tok > 0 else (max_chunk or 1)
+    if max_chunk is not None:
+        chunk = min(chunk, max_chunk)
+    return chunk
+
+
 def page_fetch_feasible(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
                         hw: HardwareSpec, spec) -> bool:
     """Can the double-buffered prefetch hide the cold-page fetches?

@@ -108,6 +108,24 @@ class MemoryPlan:
         assert self.sync_mode in ("xla", "manual"), self.sync_mode
         assert self.zero_stage in (2, 3), self.zero_stage
 
+    # ---- n_host facade ----------------------------------------------------
+    # ``n_host`` is overloaded: training plans count host-offloaded parameter
+    # chunks; serve plans (n_persist == n_chunks, core/serve_plan.py) count
+    # cold KV-cache pages. These accessors are the canonical reads — call
+    # sites that use them survive the planned split of the field into
+    # per-resource host budgets (ROADMAP) without edits.
+    @property
+    def host_param_chunks(self) -> int:
+        """Parameter chunks whose shards live in host memory (0 for serve
+        plans, where n_host counts cache pages instead)."""
+        return self.n_host if self.n_persist < self.n_chunks else 0
+
+    @property
+    def cold_kv_pages(self) -> int:
+        """Host-resident KV-cache pages of a serve plan (0 for training
+        plans, where n_host counts parameter chunks instead)."""
+        return self.n_host if self.n_persist == self.n_chunks else 0
+
     # ---- manual gradient sync eligibility ---------------------------------
     def manual_sync_kind(self, tp_degree: int = 1) -> str | None:
         """Which manual shard_map sync pipeline this plan lowers to, if any.
@@ -151,7 +169,7 @@ class MemoryPlan:
         Ineligible plans keep ``sync_mode="xla"`` semantics; the autotuner
         only proposes "manual" for plans with a non-None kind.
         """
-        if self.n_swap > 0 or self.n_host > 0 or self.zero1_persistent:
+        if self.n_swap > 0 or self.host_param_chunks > 0 or self.zero1_persistent:
             return None
         if self.n_persist == self.n_chunks:
             return "ddp" if (tp_degree == 1 or self.dp_only) else None
@@ -179,7 +197,7 @@ class MemoryPlan:
         """persist | hbm | host, for chunk i in execution order."""
         if i < self.n_persist:
             return "persist"
-        if i >= self.n_chunks - self.n_host:
+        if i >= self.n_chunks - self.host_param_chunks:
             return "host"
         return "hbm"
 

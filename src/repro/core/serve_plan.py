@@ -92,10 +92,10 @@ def paging_from_plan(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan):
     serve_totals) derives through this one function, so they stay mutually
     consistent; planner-emitted plans always round-trip exactly
     (``serve_plan`` only proposes divisor-valid windows)."""
-    if plan.n_host <= 0 or plan.n_persist < plan.n_chunks:
+    if plan.cold_kv_pages <= 0:
         return None
     full = default_paging_spec(cfg, shape)
-    n_hot = max(1, full.n_pages - plan.n_host)
+    n_hot = max(1, full.n_pages - plan.cold_kv_pages)
     from repro.serve.paging import choose_paging
 
     return choose_paging(full.cache_len, full.page_size, n_hot)

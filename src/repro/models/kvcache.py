@@ -97,17 +97,23 @@ def decode_mask(pos: jax.Array, s_kv: int, sliding: bool) -> jax.Array:
     return jnp.where(valid, 0.0, L.NEG_INF)
 
 
-def write_slot(buf: jax.Array, val: jax.Array, slot: jax.Array) -> jax.Array:
+def write_slot(buf: jax.Array, val: jax.Array, slot: jax.Array,
+               mask: jax.Array | None = None) -> jax.Array:
     """Write one decoded token into a (B, S, ...) cache at ``slot``.
 
     Scalar ``slot`` keeps the resident fast path (dynamic_update_slice);
     per-slot (B,) writes use a one-hot select over the slot axis — every batch
-    row lands at its own position (continuous batching).
+    row lands at its own position (continuous batching). ``mask`` (B,) bool,
+    per-slot only: rows of masked-off slots are left untouched (chunked
+    prefill advances a subset of slots while the rest keep their cache).
     """
     val = val.astype(buf.dtype)
     if jnp.ndim(slot) == 0:
+        assert mask is None, "write masking requires per-slot positions"
         return jax.lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
     rows = jnp.arange(buf.shape[1])[None, :] == slot[:, None]  # (B, S)
+    if mask is not None:
+        rows = rows & mask[:, None]
     rows = rows.reshape(rows.shape + (1,) * (buf.ndim - 2))
     return jnp.where(rows, val, buf)
 
@@ -127,11 +133,12 @@ class ResidentKV:
     entry_keys = ("k", "v")
 
     def update_and_fetch(self, entry: dict, k: jax.Array, v: jax.Array,
-                         pos: jax.Array, cfg: ModelConfig):
+                         pos: jax.Array, cfg: ModelConfig,
+                         active: jax.Array | None = None):
         s_kv = entry["k"].shape[1]
         slot = pos % s_kv if cfg.sliding_window else pos
-        new_k = write_slot(entry["k"], k, slot)
-        new_v = write_slot(entry["v"], v, slot)
+        new_k = write_slot(entry["k"], k, slot, mask=active)
+        new_v = write_slot(entry["v"], v, slot, mask=active)
         mask = decode_mask(pos, s_kv, bool(cfg.sliding_window))
         return new_k, new_v, mask, {"k": new_k, "v": new_v}
 
@@ -140,7 +147,7 @@ RESIDENT_KV = ResidentKV()
 
 
 def _decode_attention(ap: dict, h: jax.Array, cache: dict, pos: jax.Array,
-                      cfg: ModelConfig, kv_io=None):
+                      cfg: ModelConfig, kv_io=None, active=None):
     """h: (B,1,D). Returns (out (B,1,D), new_cache)."""
     b = h.shape[0]
     hd = cfg.resolved_head_dim
@@ -151,7 +158,8 @@ def _decode_attention(ap: dict, h: jax.Array, cache: dict, pos: jax.Array,
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
     kv_io = kv_io or RESIDENT_KV
-    full_k, full_v, logits_mask, new_cache = kv_io.update_and_fetch(cache, k, v, pos, cfg)
+    full_k, full_v, logits_mask, new_cache = kv_io.update_and_fetch(
+        cache, k, v, pos, cfg, active=active)
     out = _masked_decode_attn(q, full_k, full_v, logits_mask)
     return out.reshape(b, 1, -1) @ ap["wo"], new_cache
 
@@ -183,18 +191,25 @@ def _decode_cross_attention(ap: dict, h: jax.Array, xk: jax.Array, xv: jax.Array
 
 
 def decode_position(pparams: dict, x: jax.Array, pcache: dict, pos: jax.Array,
-                    cfg: ModelConfig, kv_io=None):
-    """One layer, one token. x: (B,1,D)."""
+                    cfg: ModelConfig, kv_io=None, active=None):
+    """One layer, one token. x: (B,1,D). ``active`` (B,) bool masks cache
+    writes for slots not participating in this step (chunked prefill)."""
     h = L.apply_norm(pparams["norm1"], x, cfg.norm)
     new_cache = dict(pcache)
     if "attn" in pparams:
         keys = (kv_io or RESIDENT_KV).entry_keys
         sub = {name: pcache[name] for name in keys}
-        mix, upd = _decode_attention(pparams["attn"], h, sub, pos, cfg, kv_io=kv_io)
+        mix, upd = _decode_attention(pparams["attn"], h, sub, pos, cfg,
+                                     kv_io=kv_io, active=active)
         new_cache.update(upd)
     else:
         state = (pcache["conv"], pcache["ssm"])
         mix, (conv, ssm) = M2.apply_mamba2(pparams["mamba"], h, cfg, state=state, return_state=True)
+        if active is not None:
+            m = active.reshape((-1,) + (1,) * (conv.ndim - 1))
+            conv = jnp.where(m, conv, pcache["conv"])
+            m = active.reshape((-1,) + (1,) * (ssm.ndim - 1))
+            ssm = jnp.where(m, ssm, pcache["ssm"])
         new_cache.update({"conv": conv, "ssm": ssm})
     x = x + mix
     if "xattn" in pparams:
@@ -221,6 +236,7 @@ def decode_step(
     *,
     gather_specs=None,
     kv_io=None,
+    active=None,  # (B,) bool or None — mask cache writes per slot
 ) -> tuple[jax.Array, dict]:
     """One decode step across the whole model. Returns (logits (B,V), cache).
 
@@ -241,7 +257,7 @@ def decode_step(
             specs = None if gather_specs is None else gather_specs[f"pos{j}"]
             pp = gather_weights(slices[f"pos{j}"]["params"], specs)
             x, nc = decode_position(pp, x, slices[f"pos{j}"]["cache"], pos, cfg,
-                                    kv_io=kv_io)
+                                    kv_io=kv_io, active=active)
             new_slices[f"pos{j}"] = nc
         return x, new_slices
 

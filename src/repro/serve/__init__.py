@@ -5,15 +5,19 @@ Three modules mirror the training stack's plan->program split:
   * ``paging``   — page-table KV cache: hot window resident in HBM, cold
     pages in host memory, double-buffered h2d prefetch inside the decode
     scan (the serving twin of the training path's lazy per-chunk gathers);
+  * ``prefill``  — chunked prefill: one compiled ``lax.scan`` of decode
+    steps ingests a prompt block per call, bitwise-equal to token-by-token
+    replay (``serve/prefill.py``);
   * ``scheduler`` — continuous batching: admit/evict/finish requests into
     batch slots with per-slot sequence lengths and page allocation against
     a bounded pool;
-  * ``engine``   — drives ``step_builder.build_decode_step`` (resident or
-    paged) over the scheduler's slot state, serving a request stream.
+  * ``engine``   — drives ``step_builder.build_decode_step`` /
+    ``build_prefill_step`` (resident or paged) over the scheduler's slot
+    state behind the request API (``submit``/``run``/``stream``).
 
 See docs/serving.md for the dataflow and the plan-knob meanings.
 """
-from repro.serve.engine import DecodeEngine, EngineReport
+from repro.serve.engine import DecodeEngine, EngineReport, TokenEvent
 from repro.serve.paging import (
     PagedKV,
     PagingSpec,
@@ -22,6 +26,7 @@ from repro.serve.paging import (
     paged_cache_specs,
     paged_to_resident,
 )
+from repro.serve.prefill import prefill_chunk
 from repro.serve.scheduler import ContinuousScheduler, PagePool, Request
 
 __all__ = [
@@ -32,8 +37,10 @@ __all__ = [
     "PagedKV",
     "PagingSpec",
     "Request",
+    "TokenEvent",
     "choose_paging",
     "init_paged_cache",
     "paged_cache_specs",
     "paged_to_resident",
+    "prefill_chunk",
 ]

@@ -143,7 +143,13 @@ def init_paged_cache(cfg: ModelConfig, batch: int, seq_len: int,
 
 
 def paged_to_resident(cache: dict) -> dict:
-    """Resident-layout view of a paged cache (cold is canonical)."""
+    """Resident-layout view of a paged cache.
+
+    Under write-through (``PagedKV(flush=False)``) cold is canonical at every
+    step. Under page-boundary flush (the default) cold is canonical for every
+    *completed* page; each slot's current write page is only in the hot ring
+    until the slot crosses the next page boundary.
+    """
     out = {}
     for pos, entry in cache.items():
         if "k_cold" not in entry:
@@ -167,19 +173,28 @@ class PagedKV:
     device-memory) makes the h2d fetch an explicit op inside the scan; when
     None the transfer is left to XLA's memory-space propagation (tests that
     construct PagedKV without a mesh).
+
+    ``flush`` selects the cold-store write policy. ``True`` (default) is the
+    page-boundary flush of docs/serving.md §5: the hot ring is the only
+    per-token write target, and a completed page is copied hot→cold once per
+    ``page_size`` steps — one d2h burst per page instead of a one-token d2h
+    every step. ``False`` keeps the original write-through (cold updated
+    every token), retained as the reference policy the flush equivalence
+    test compares against.
     """
 
     entry_keys = ("k_hot", "v_hot", "k_cold", "v_cold")
 
-    def __init__(self, spec: PagingSpec, fetch_sharding=None):
+    def __init__(self, spec: PagingSpec, fetch_sharding=None,
+                 flush: bool = True):
         self.spec = spec
         self.fetch_sharding = fetch_sharding
+        self.flush = flush
 
     # -- page residency -----------------------------------------------------
-    def _page_is_hot(self, wp: jax.Array, p: int, sliding: bool) -> jax.Array:
-        """Is logical page ``p`` servable from the hot ring at write page
-        ``wp``? Scalar bool; per-slot write pages reduce with ALL (a page is
-        fetched unless hot for every batch row).
+    def _hot_mask(self, wp: jax.Array, p: int, sliding: bool) -> jax.Array:
+        """Is logical page ``p`` fully servable from the hot ring for a slot
+        at write page ``wp``? Shape follows ``wp`` (scalar, or (B,) per-slot).
 
         Full attention: the last ``n_hot`` pages including the current write
         page (its unwritten rows are masked, so stale ring content there is
@@ -187,20 +202,55 @@ class PagedKV:
         cache slot is *valid*, and the current write page's not-yet-rewritten
         slots hold values from one ring cycle ago — older than the hot
         window — so only the ``n_hot - 1`` most recent *fully written* pages
-        are servable; the write page itself always comes from cold.
+        are servable; the write page itself needs cold rows (all of them
+        under write-through; the not-yet-rewritten tail under flush).
         """
         s = self.spec
         if sliding:
             d = (wp - p) % s.n_pages
-            hot = (d >= 1) & (d < s.n_hot)
-        else:
-            hot = (wp >= p) & (wp - p < s.n_hot)
-        return jnp.all(hot)
+            return (d >= 1) & (d < s.n_hot)
+        return (wp >= p) & (wp - p < s.n_hot)
+
+    def _page_is_hot(self, wp: jax.Array, p: int, sliding: bool) -> jax.Array:
+        """Scalar ALL-reduction of ``_hot_mask`` (a page is fetched unless
+        hot for every batch row)."""
+        return jnp.all(self._hot_mask(wp, p, sliding))
+
+    def _take_hot_rows(self, wp: jax.Array, slot: jax.Array, p: int,
+                       sliding: bool) -> jax.Array:
+        """Flush-mode row-level residency of page ``p``: True where the hot
+        ring holds the canonical value, False where cold does.
+
+        Full attention: the write page has no canonical cold copy (it is
+        flushed only on completion), so the whole hot window — write page
+        included — serves from the ring; unwritten rows are masked. Sliding
+        rings additionally split the write page by row: rows the current
+        cycle already rewrote (``row <= slot % P``) live in the ring, the
+        remaining rows still hold *last* cycle's values, flushed to cold when
+        that cycle completed the page.
+
+        Returns a rank-2 mask broadcastable against the page's (B, P) leading
+        axes: (B-or-1, 1) for full attention, (B-or-1, P) for sliding rings.
+        """
+        s = self.spec
+        if not sliding:
+            mask = self._hot_mask(wp, p, sliding)  # write page included
+            return mask.reshape((-1, 1))  # (B, 1) or (1, 1)
+        d = jnp.asarray((wp - p) % s.n_pages).reshape((-1,))  # (B,) or (1,)
+        full = (d >= 1) & (d < s.n_hot)
+        rows = jnp.arange(s.page_size)
+        written = rows[None, :] <= jnp.asarray(slot % s.page_size).reshape((-1, 1))
+        return full[:, None] | ((d == 0)[:, None] & written)
 
     def _gather(self, hot: jax.Array, cold: jax.Array, wp: jax.Array,
-                sliding: bool) -> jax.Array:
+                slot: jax.Array, sliding: bool) -> jax.Array:
         """Reconstruct the full (B, S, n_kv, hd) cache from hot ring + cold
-        pages, double-buffered prefetch ordering on the cold fetches."""
+        pages, double-buffered prefetch ordering on the cold fetches.
+
+        Write-through keeps the per-page all-or-nothing ``lax.cond`` (cold is
+        always canonical, so any page may be fetched whole). Flush mode keeps
+        the all-hot fast path as a ``lax.cond`` but resolves mixed pages with
+        a per-slot (sliding: per-row) select between ring and fetched cold."""
         s = self.spec
         P = s.page_size
         pages: list[jax.Array] = []
@@ -218,27 +268,80 @@ class PagedKV:
             def from_cold(h, c, _sh=fetch):
                 return c if _sh is None else jax.device_put(c, _sh)
 
+            if not self.flush:
+                pages.append(jax.lax.cond(
+                    self._page_is_hot(wp, p, sliding),
+                    lambda h, c: h, from_cold, hot_rows, cold_rows))
+                continue
+
+            take_hot = self._take_hot_rows(wp, slot, p, sliding)  # (B?, P?)
+            sel = take_hot[..., None, None]  # broadcast over (B, P, kv, hd)
+
+            def mixed(h, c, _sh=fetch, _sel=sel):
+                c = c if _sh is None else jax.device_put(c, _sh)
+                return jnp.where(_sel, h, c)
+
             pages.append(jax.lax.cond(
-                self._page_is_hot(wp, p, sliding),
-                lambda h, c: h, from_cold, hot_rows, cold_rows))
+                jnp.all(take_hot), lambda h, c: h, mixed, hot_rows, cold_rows))
         return jnp.concatenate(pages, axis=1)
+
+    # -- page-boundary flush --------------------------------------------------
+    def _flush_cold(self, cold: jax.Array, hot: jax.Array, slot: jax.Array,
+                    active: jax.Array | None) -> jax.Array:
+        """Copy each slot's just-completed page hot→cold when the slot sits
+        on a page boundary (``(slot + 1) % page_size == 0``); no cold write
+        otherwise. The ring row of cache row ``r`` is exactly
+        ``r % hot_window`` (``hot_window`` divides the ring), which keeps the
+        per-slot source lookup a plain modular gather."""
+        s = self.spec
+        P, W = s.page_size, s.hot_window
+        if jnp.ndim(slot) == 0:
+            wp = slot // P
+
+            def do_flush(c, h):
+                page = jax.lax.dynamic_slice_in_dim(h, (wp % s.n_hot) * P, P, axis=1)
+                return jax.lax.dynamic_update_slice_in_dim(c, page, wp * P, axis=1)
+
+            return jax.lax.cond((slot + 1) % P == 0, do_flush,
+                                lambda c, h: c, cold, hot)
+
+        boundary = (slot + 1) % P == 0
+        if active is not None:
+            boundary = boundary & active
+        wp = slot // P
+        rows = jnp.arange(cold.shape[1])
+
+        def do_flush(c, h):
+            src = jnp.take(h, rows % W, axis=1)  # (B, S, ...) ring view
+            sel = boundary[:, None] & (rows[None, :] // P == wp[:, None])
+            return jnp.where(sel.reshape(sel.shape + (1,) * (c.ndim - 2)), src, c)
+
+        return jax.lax.cond(jnp.any(boundary), do_flush,
+                            lambda c, h: c, cold, hot)
 
     # -- the kv_io hook -------------------------------------------------------
     def update_and_fetch(self, entry: dict, k: jax.Array, v: jax.Array,
-                         pos: jax.Array, cfg: ModelConfig):
+                         pos: jax.Array, cfg: ModelConfig,
+                         active: jax.Array | None = None):
         s = self.spec
         s_kv = entry["k_cold"].shape[1]
         assert s_kv == s.cache_len, (s_kv, s.cache_len)
         sliding = bool(cfg.sliding_window)
         slot = pos % s_kv if sliding else pos
-        # write-through: hot ring at slot % W, canonical cold at slot
-        hot_k = KV.write_slot(entry["k_hot"], k, slot % s.hot_window)
-        hot_v = KV.write_slot(entry["v_hot"], v, slot % s.hot_window)
-        cold_k = KV.write_slot(entry["k_cold"], k, slot)
-        cold_v = KV.write_slot(entry["v_cold"], v, slot)
+        # hot ring at slot % W is the per-token write target
+        hot_k = KV.write_slot(entry["k_hot"], k, slot % s.hot_window, mask=active)
+        hot_v = KV.write_slot(entry["v_hot"], v, slot % s.hot_window, mask=active)
+        if self.flush:
+            # cold receives a completed page once per page_size steps
+            cold_k = self._flush_cold(entry["k_cold"], hot_k, slot, active)
+            cold_v = self._flush_cold(entry["v_cold"], hot_v, slot, active)
+        else:
+            # write-through: canonical cold updated every token
+            cold_k = KV.write_slot(entry["k_cold"], k, slot, mask=active)
+            cold_v = KV.write_slot(entry["v_cold"], v, slot, mask=active)
         wp = slot // s.page_size
-        full_k = self._gather(hot_k, cold_k, wp, sliding)
-        full_v = self._gather(hot_v, cold_v, wp, sliding)
+        full_k = self._gather(hot_k, cold_k, wp, slot, sliding)
+        full_v = self._gather(hot_v, cold_v, wp, slot, sliding)
         mask = KV.decode_mask(pos, s_kv, sliding)
         new_entry = {"k_hot": hot_k, "v_hot": hot_v,
                      "k_cold": cold_k, "v_cold": cold_v}

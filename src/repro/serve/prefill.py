@@ -1,0 +1,61 @@
+"""Chunked prefill: ingest prompt tokens into the decode cache in one call.
+
+``prefill_chunk`` runs a ``lax.scan`` of ``C`` single-token decode steps over
+a (B, C) token block — per-slot start positions, per-slot token counts — so a
+batch of prompts (or one chunk of each) lands in the cache as ONE compiled
+program instead of C engine round-trips. Each inner step is *the* decode step
+(``models.kvcache.decode_step``) with an ``active = t < n_tok`` slot mask:
+slots whose chunk is shorter than ``C`` simply stop writing, and the ops run
+for active slots are bitwise-identical to token-by-token teacher-forced
+replay (tests/test_serve_prefill.py asserts diff == 0.0 on resident and
+paged caches).
+
+Chunking policy lives elsewhere: the scheduler decides *when* a prefill
+chunk runs relative to decode ticks (serve/scheduler.py:should_prefill) and
+the cost model decides *how large* a chunk fits in the decode-latency budget
+(core/cost_model.py:choose_prefill_chunk). This module is only the dataflow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import kvcache as KV
+
+
+def prefill_chunk(params: dict, cache: dict, tokens: jax.Array,
+                  pos: jax.Array, n_tok: jax.Array, cfg: ModelConfig, *,
+                  gather_specs=None, kv_io=None) -> tuple[jax.Array, dict]:
+    """Feed up to ``C`` prompt tokens per batch slot into the decode cache.
+
+    Args:
+      tokens: (B, C) int32 — slot b feeds ``tokens[b, :n_tok[b]]``; the tail
+        is padding (ignored, cache untouched).
+      pos:    (B,) int32 — cache position of each slot's first chunk token.
+      n_tok:  (B,) int32 — tokens to ingest per slot (0 leaves the slot's
+        cache and logits row untouched).
+
+    Returns ``(last_logits, new_cache)`` where ``last_logits[b]`` is the
+    logits produced by slot b's final fed token (position
+    ``pos[b] + n_tok[b] - 1``) — the next-token distribution the engine
+    samples from when the chunk completes the prompt — and zeros for slots
+    with ``n_tok == 0``.
+    """
+    b, c = tokens.shape
+
+    def body(carry, xs):
+        cache, last = carry
+        tok_t, t = xs  # (B,), ()
+        active = t < n_tok
+        logits, cache = KV.decode_step(
+            params, cache, tok_t[:, None], pos + t, cfg,
+            gather_specs=gather_specs, kv_io=kv_io, active=active,
+        )
+        last = jnp.where((t == n_tok - 1)[:, None], logits, last)
+        return (cache, last), None
+
+    last0 = jnp.zeros((b, cfg.vocab_size), jnp.dtype(cfg.dtype))
+    (cache, last), _ = jax.lax.scan(
+        body, (cache, last0), (tokens.T, jnp.arange(c, dtype=jnp.int32)))
+    return last, cache

@@ -30,12 +30,22 @@ from typing import Iterable
 
 @dataclasses.dataclass
 class Request:
+    """Canonical submission form: ``prompt_tokens`` + ``max_new_tokens``.
+
+    ``prompt`` remains as a read alias for the pre-redesign field name
+    (positional construction is unchanged).
+    """
+
     rid: int
-    prompt: list[int]  # token ids (at least one)
+    prompt_tokens: list[int]  # token ids (at least one)
     max_new_tokens: int
 
     def __post_init__(self):
-        assert len(self.prompt) >= 1 and self.max_new_tokens >= 1
+        assert len(self.prompt_tokens) >= 1 and self.max_new_tokens >= 1
+
+    @property
+    def prompt(self) -> list[int]:
+        return self.prompt_tokens
 
 
 class PagePool:
@@ -152,17 +162,21 @@ class ContinuousScheduler:
         return True
 
     # -- per-step interface ---------------------------------------------------
-    def step_inputs(self) -> tuple[list[int], list[int], list[bool]]:
+    def step_inputs(self, replay_prefill: bool = True
+                    ) -> tuple[list[int], list[int], list[bool]]:
         """(token, position, active) per slot for the next decode step.
 
-        Prefill slots replay their prompt token at the current position;
-        decode slots feed their last sampled token. Inactive slots decode
-        token 0 at position 0 (their output is discarded; their cache rows
-        are rewritten before ever being attended — see engine.reset_slots).
+        Decode slots feed their last sampled token. Prefill slots replay
+        their prompt token at the current position when ``replay_prefill``
+        (the legacy teacher-forced admission path); with it False (chunked
+        prefill owns prompt ingestion) they sit the decode tick out as
+        inactive. Inactive slots decode token 0 at position 0 — their output
+        is discarded, and the ``active`` mask suppresses their cache writes
+        (models.kvcache.write_slot), so mid-prefill slots keep their rows.
         """
         toks, poss, active = [], [], []
         for s in self.slots:
-            if s is None:
+            if s is None or (s.in_prefill and not replay_prefill):
                 toks.append(0)
                 poss.append(0)
                 active.append(False)
@@ -175,35 +189,100 @@ class ContinuousScheduler:
             active.append(True)
         return toks, poss, active
 
-    def advance(self, sampled: list[int]) -> None:
+    def ensure_pages(self, b: int, target_len: int) -> bool:
+        """Grow slot ``b``'s page hold to cover ``target_len``, evicting
+        youngest runners (never the last) and rejecting outright when the
+        demand exceeds the whole pool. Returns True iff the slot survived
+        (it may itself be the youngest and get evicted)."""
+        s = self.slots[b]
+        need = self._pages_needed(target_len)
+        while self.slots[b] is not None and self.pool.held_by(b) < need:
+            if self.pool.alloc(b, 1) is not None:
+                continue
+            if not self._evict_youngest():
+                # b is the last runner and owns every page: its demand
+                # exceeds the pool outright — reject, don't livelock
+                self.rejected[s.rid] = list(s.generated)
+                self.pool.free_slot(b)
+                self.slots[b] = None
+        return self.slots[b] is not None
+
+    def _finish_or_grow(self, b: int) -> None:
+        """Post-advance bookkeeping shared by decode ticks and prefill
+        chunks: retire done / cache-exhausted slots, else page up for the
+        next token write."""
+        s = self.slots[b]
+        out_of_cache = s.length >= self.cache_len and not self.allow_wrap
+        if s.done or out_of_cache:
+            self.finished[s.rid] = list(s.generated)
+            if out_of_cache and not s.done:
+                self.truncated.add(s.rid)
+            self.pool.free_slot(b)
+            self.slots[b] = None
+            return
+        self.ensure_pages(b, s.length + 1)
+
+    def advance(self, sampled: list[int], active: list[bool] | None = None) -> None:
         """Account one decode step: grow lengths, collect samples, finish
-        done slots, allocate pages crossed into (evicting on exhaustion)."""
+        done slots, allocate pages crossed into (evicting on exhaustion).
+        ``active`` (the mask ``step_inputs`` returned) skips slots that sat
+        the tick out — occupied but mid-chunked-prefill."""
         for b, s in enumerate(self.slots):
-            if s is None:
+            if s is None or (active is not None and not active[b]):
                 continue
             s.length += 1
             if s.length >= len(s.prompt):
                 # the step consuming the last prompt token (and every one
                 # after it) produces a sampled continuation token
                 s.generated.append(int(sampled[b]))
-            out_of_cache = s.length >= self.cache_len and not self.allow_wrap
-            if s.done or out_of_cache:
-                self.finished[s.rid] = list(s.generated)
-                if out_of_cache and not s.done:
-                    self.truncated.add(s.rid)
-                self.pool.free_slot(b)
-                self.slots[b] = None
+            self._finish_or_grow(b)
+
+    # -- chunked-prefill interface -------------------------------------------
+    def prefill_slots(self) -> list[int]:
+        return [b for b, s in enumerate(self.slots) if s is not None and s.in_prefill]
+
+    def decode_ready(self) -> list[int]:
+        """Slots with an in-flight stream a prefill tick would stall."""
+        return [b for b, s in enumerate(self.slots)
+                if s is not None and not s.in_prefill]
+
+    def should_prefill(self, consec_prefill: int, chunk_budget: int | None) -> bool:
+        """Interleaving policy: run a prefill tick next?
+
+        No prefill work -> never. No decode-ready streams to stall (or no
+        budget cap) -> always. Otherwise cap consecutive prefill ticks at
+        ``chunk_budget`` so no in-flight stream waits more than
+        ``chunk_budget`` chunk calls between its tokens (property-tested in
+        tests/test_serve_prefill.py)."""
+        if not self.prefill_slots():
+            return False
+        if chunk_budget is None or not self.decode_ready():
+            return True
+        return consec_prefill < chunk_budget
+
+    def prefill_budget(self, b: int) -> int:
+        """Max prompt tokens slot ``b`` may ingest in the next chunk:
+        its remaining prompt, clamped at the cache edge for non-wrapping
+        (full-attention) caches — mirroring replay truncation."""
+        s = self.slots[b]
+        remaining = len(s.prompt) - s.length
+        if not self.allow_wrap:
+            remaining = min(remaining, self.cache_len - s.length)
+        return max(0, remaining)
+
+    def advance_prefill(self, fed: list[int], sampled: list[int]) -> None:
+        """Account one chunked-prefill call: slot ``b`` ingested ``fed[b]``
+        prompt tokens; ``sampled[b]`` is the continuation token its final
+        fed token produced (used only when the chunk completes the prompt).
+        """
+        for b, s in enumerate(self.slots):
+            if s is None or not fed[b]:
                 continue
-            need = self._pages_needed(s.length + 1)
-            while self.slots[b] is not None and self.pool.held_by(b) < need:
-                if self.pool.alloc(b, 1) is not None:
-                    continue
-                if not self._evict_youngest():
-                    # b is the last runner and owns every page: its demand
-                    # exceeds the pool outright — reject, don't livelock
-                    self.rejected[s.rid] = list(s.generated)
-                    self.pool.free_slot(b)
-                    self.slots[b] = None
+            assert s.in_prefill and s.length + fed[b] <= len(s.prompt)
+            s.length += fed[b]
+            if s.length >= len(s.prompt):
+                s.generated.append(int(sampled[b]))
+            self._finish_or_grow(b)
 
     @property
     def idle(self) -> bool:

@@ -612,30 +612,18 @@ def build_serve_params(cfg: ModelConfig, plan: MemoryPlan, mesh):
     return p_defs, p_shard, gather, fetch
 
 
-def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConfig,
-                      *, paging=None, per_slot_pos: bool = False) -> StepArtifacts:
-    """Decode step for a serve plan.
+def _serve_cache_layout(cfg: ModelConfig, plan: MemoryPlan, mesh,
+                        shape: ShapeConfig, paging):
+    """Shared decode/prefill cache layout for a serve plan.
 
-    ``paging`` (a ``serve.paging.PagingSpec``) switches the attention caches
-    to the paged layout: hot rings stay in HBM, the canonical cold pages live
-    in host memory (``compat.host_memory_kind``), and the step reconstructs
-    each layer's cache page-wise inside the repeat scan through the
-    ``PagedKV`` kv_io hook — the serving twin of ``Run.lazy_gather``. When
-    ``plan.n_host > 0`` and no spec is passed, one is derived via
-    ``serve_plan.paging_from_plan``. ``per_slot_pos`` widens the ``pos``
-    input to (B,) so every batch slot decodes at its own position
-    (continuous batching)."""
+    Returns ``(cache_sds, cache_shard, kv_io, host_pin, tok_batch_ax)``:
+    the sharded cache ShapeDtypeStructs, their sharding tree, the PagedKV
+    hook (None for resident layouts), the cold-leaf re-pin tree (paged
+    layouts re-emit cold leaves in device memory out of the repeat scan),
+    and the batch axis tokens shard over."""
     from repro.compat import host_memory_kind
 
-    if paging is None and plan.n_host > 0 and plan.n_persist == plan.n_chunks:
-        from repro.core.serve_plan import paging_from_plan
-
-        paging = paging_from_plan(cfg, shape, plan)
-
-    p_defs, p_shard, gather, fetch = build_serve_params(cfg, plan, mesh)
-    sharder = SH.make_activation_sharder(mesh, plan)
     bsz = shape.global_batch
-
     if paging is None:
         cache_spec_tree = KV.cache_specs(cfg, bsz, shape.seq_len)
     else:
@@ -694,19 +682,6 @@ def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConf
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
     )
 
-    state_specs = {
-        "params": SH.tree_specs(p_defs, p_shard),
-        "cache": cache_sds,
-    }
-    pos_spec = (jax.ShapeDtypeStruct((bsz,), jnp.int32) if per_slot_pos
-                else jax.ShapeDtypeStruct((), jnp.int32))
-    batch_specs = {
-        "tokens": jax.ShapeDtypeStruct(
-            (bsz, 1), jnp.int32, sharding=NamedSharding(mesh, P(tok_batch_ax, None))
-        ),
-        "pos": pos_spec,
-    }
-
     kv_io = None
     host_pin = None
     if paging is not None:
@@ -723,23 +698,77 @@ def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConf
                   if name in ("k_cold", "v_cold")}
             for pos, entry in cache_shard.items()
         }
+    return cache_sds, cache_shard, kv_io, host_pin, tok_batch_ax
+
+
+def _repin_cold(new_cache: dict, host_pin) -> dict:
+    if host_pin is None:
+        return new_cache
+    return {
+        pos: {
+            name: (jax.device_put(leaf, host_pin[pos][name])
+                   if name in host_pin[pos] else leaf)
+            for name, leaf in entry.items()
+        }
+        for pos, entry in new_cache.items()
+    }
+
+
+def _resolve_paging(cfg: ModelConfig, plan: MemoryPlan, shape: ShapeConfig, paging):
+    """Derive the PagingSpec a serve plan encodes when none is passed."""
+    if paging is None and plan.cold_kv_pages > 0:
+        from repro.core.serve_plan import paging_from_plan
+
+        paging = paging_from_plan(cfg, shape, plan)
+    return paging
+
+
+def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConfig,
+                      *, paging=None, per_slot_pos: bool = False) -> StepArtifacts:
+    """Decode step for a serve plan.
+
+    ``paging`` (a ``serve.paging.PagingSpec``) switches the attention caches
+    to the paged layout: hot rings stay in HBM, the canonical cold pages live
+    in host memory (``compat.host_memory_kind``), and the step reconstructs
+    each layer's cache page-wise inside the repeat scan through the
+    ``PagedKV`` kv_io hook — the serving twin of ``Run.lazy_gather``. When
+    ``plan.cold_kv_pages > 0`` and no spec is passed, one is derived via
+    ``serve_plan.paging_from_plan``. ``per_slot_pos`` widens the ``pos``
+    input to (B,) so every batch slot decodes at its own position
+    (continuous batching), and adds an optional ``active`` (B,) bool batch
+    input masking cache writes of non-participating slots (the engine passes
+    it when some slots are mid-chunked-prefill)."""
+    paging = _resolve_paging(cfg, plan, shape, paging)
+    p_defs, p_shard, gather, fetch = build_serve_params(cfg, plan, mesh)
+    sharder = SH.make_activation_sharder(mesh, plan)
+    bsz = shape.global_batch
+
+    cache_sds, cache_shard, kv_io, host_pin, tok_batch_ax = _serve_cache_layout(
+        cfg, plan, mesh, shape, paging)
+
+    state_specs = {
+        "params": SH.tree_specs(p_defs, p_shard),
+        "cache": cache_sds,
+    }
+    pos_spec = (jax.ShapeDtypeStruct((bsz,), jnp.int32) if per_slot_pos
+                else jax.ShapeDtypeStruct((), jnp.int32))
+    batch_specs = {
+        "tokens": jax.ShapeDtypeStruct(
+            (bsz, 1), jnp.int32, sharding=NamedSharding(mesh, P(tok_batch_ax, None))
+        ),
+        "pos": pos_spec,
+    }
+    if per_slot_pos:
+        batch_specs["active"] = jax.ShapeDtypeStruct((bsz,), jnp.bool_)
 
     def step_fn(state, batch):
         M.set_activation_sharder(sharder)
         fparams = fetch(state["params"])
         logits, new_cache = KV.decode_step(
             fparams, state["cache"], batch["tokens"], batch["pos"], cfg,
-            gather_specs=gather, kv_io=kv_io,
+            gather_specs=gather, kv_io=kv_io, active=batch.get("active"),
         )
-        if host_pin is not None:
-            new_cache = {
-                pos: {
-                    name: (jax.device_put(leaf, host_pin[pos][name])
-                           if name in host_pin[pos] else leaf)
-                    for name, leaf in entry.items()
-                }
-                for pos, entry in new_cache.items()
-            }
+        new_cache = _repin_cold(new_cache, host_pin)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return {"params": state["params"], "cache": new_cache}, next_tok
 
@@ -754,7 +783,26 @@ def build_decode_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConf
     )
 
 
-def build_prefill_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConfig) -> StepArtifacts:
+def build_prefill_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeConfig,
+                       *, chunk: int | None = None, paging=None) -> StepArtifacts:
+    """Prefill for a serve plan, in one of two forms.
+
+    ``chunk=None`` (legacy): a stateless full-sequence parallel forward
+    returning last-position logits — the shape/fidelity dryrun path, which
+    never touches a decode cache.
+
+    ``chunk=C``: the cache-ingesting chunked prefill the serving engine
+    admits requests through (serve/prefill.py). State and shardings match
+    ``build_decode_step`` exactly (params + decode cache, paged or resident),
+    so one state dict threads through both programs; the batch is a (B, C)
+    token block with per-slot start positions and per-slot token counts.
+    Feeding the same tokens through this step and through token-by-token
+    decode replay produces bitwise-identical caches and logits (the per-token
+    ops are the same; tests/test_serve_prefill.py asserts diff == 0.0).
+    """
+    if chunk is not None:
+        return _build_chunked_prefill_step(cfg, plan, mesh, shape,
+                                           chunk=chunk, paging=paging)
     p_defs, p_shard, gather, fetch = build_serve_params(cfg, plan, mesh)
     sharder = SH.make_activation_sharder(mesh, plan)
     gb, sl = shape.global_batch, shape.seq_len
@@ -792,6 +840,53 @@ def build_prefill_step(cfg: ModelConfig, plan: MemoryPlan, mesh, shape: ShapeCon
         state_specs=SH.tree_specs(p_defs, p_shard),
         batch_specs=batch_specs,
         state_shardings=p_shard,
+        batch_shardings=None,
+        plan=plan,
+        runs=plan_runs(plan, M.num_repeats(cfg)),
+    )
+
+
+def _build_chunked_prefill_step(cfg: ModelConfig, plan: MemoryPlan, mesh,
+                                shape: ShapeConfig, *, chunk: int,
+                                paging=None) -> StepArtifacts:
+    from repro.serve.prefill import prefill_chunk
+
+    paging = _resolve_paging(cfg, plan, shape, paging)
+    p_defs, p_shard, gather, fetch = build_serve_params(cfg, plan, mesh)
+    sharder = SH.make_activation_sharder(mesh, plan)
+    bsz = shape.global_batch
+
+    cache_sds, cache_shard, kv_io, host_pin, tok_batch_ax = _serve_cache_layout(
+        cfg, plan, mesh, shape, paging)
+
+    state_specs = {
+        "params": SH.tree_specs(p_defs, p_shard),
+        "cache": cache_sds,
+    }
+    batch_specs = {
+        "tokens": jax.ShapeDtypeStruct(
+            (bsz, chunk), jnp.int32,
+            sharding=NamedSharding(mesh, P(tok_batch_ax, None))),
+        "pos": jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        "n_tok": jax.ShapeDtypeStruct((bsz,), jnp.int32),
+    }
+
+    def step_fn(state, batch):
+        M.set_activation_sharder(sharder)
+        fparams = fetch(state["params"])
+        last, new_cache = prefill_chunk(
+            fparams, state["cache"], batch["tokens"], batch["pos"],
+            batch["n_tok"], cfg, gather_specs=gather, kv_io=kv_io,
+        )
+        new_cache = _repin_cold(new_cache, host_pin)
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return {"params": state["params"], "cache": new_cache}, next_tok
+
+    return StepArtifacts(
+        fn=step_fn,
+        state_specs=state_specs,
+        batch_specs=batch_specs,
+        state_shardings={"params": p_shard, "cache": cache_shard},
         batch_shardings=None,
         plan=plan,
         runs=plan_runs(plan, M.num_repeats(cfg)),
