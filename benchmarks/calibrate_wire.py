@@ -82,20 +82,25 @@ from repro.core.plan import MemoryPlan
 from repro.launch.roofline import parse_collectives
 from repro.train.step_builder import build_train_step
 
-# (key, sync_mode, grad_compress, n_persist of the 4-chunk plan, zero_stage)
+# (key, sync_mode, grad_compress, n_persist of the 4-chunk plan, zero_stage,
+#  n_buffer)
 CONFIGS = [
-    ("xla/none", "xla", "none", 4, 3),
-    ("xla/bf16", "xla", "bf16", 4, 3),
-    ("xla/int8_ef", "xla", "int8_ef", 4, 3),
-    ("manual/bf16", "manual", "bf16", 4, 3),
-    ("manual/int8_ef", "manual", "int8_ef", 4, 3),
+    ("xla/none", "xla", "none", 4, 3, 0),
+    ("xla/bf16", "xla", "bf16", 4, 3, 0),
+    ("xla/int8_ef", "xla", "int8_ef", 4, 3, 0),
+    ("manual/bf16", "manual", "bf16", 4, 3, 0),
+    ("manual/int8_ef", "manual", "int8_ef", 4, 3, 0),
     # ZeRO-sharded manual, both dataflows. "zero3" (lazy per-chunk gather)
     # is the fit source for the "int8_ef_rs" reduce-scatter factor (the s8
     # all_to_all payload of the gather VJP) AND the "gather_bf16" param-
     # gather factor (its bf16 all-gathers vs the modeled per-chunk topology
-    # bytes); "zero2" (up-front gather) is measured for the record.
-    ("manual_zero2/int8_ef", "manual", "int8_ef", 0, 2),
-    ("manual_zero3/int8_ef", "manual", "int8_ef", 0, 3),
+    # bytes); "zero2" (up-front gather) is measured for the record, as is
+    # the fully-buffered "zero3_buf" (ISSUE-7: the prefetch pipeline must
+    # keep the gather census unchanged — same gathers, earlier issue slots,
+    # no BWD re-gathers per the buffered branch of the modeled pipeline).
+    ("manual_zero2/int8_ef", "manual", "int8_ef", 0, 2, 0),
+    ("manual_zero3/int8_ef", "manual", "int8_ef", 0, 3, 0),
+    ("manual_zero3_buf/int8_ef", "manual", "int8_ef", 0, 3, 4),
 ]
 DRY_RUN_KEYS = ("xla/none", "manual_zero3/int8_ef")
 
@@ -198,6 +203,41 @@ def dataclasses_asdict_safe(obj) -> dict:
     return _dc.asdict(obj) if _dc.is_dataclass(obj) else dict(obj)
 
 
+def modeled_overlap(steps_model: str, mesh) -> dict:
+    """Hidden-comm fraction of the reference buffered manual zero3 plan:
+    ``1 - t_overlap / t_serial`` from the cost model's two pricings of the
+    *same* plan (overlap: per-chunk max(compute, comm); serial: their sum —
+    see cost_model.estimate_runtime). Purely modeled — the forced-host CPU
+    backend executes collectives inline on the compute cores, so a measured
+    wall-clock fraction here would say nothing about overlap; the dry-run
+    band instead guards the pricing identity itself: some comm must hide
+    (fraction > 0 whenever any chunk has both compute and comm) and not all
+    time can vanish (fraction well below 1 — compute is still on the
+    critical path). Recorded in the installed calibration per backend as an
+    informational key; ``load_wire_calibration`` ignores it, so pre-ISSUE-7
+    JSONs without it load unchanged."""
+    import dataclasses as _dc
+
+    from repro.core import build_workload, estimate_runtime
+    from repro.core.hardware import LOCAL_CPU_HW, MeshSpec
+
+    cfg = reduced(ARCHS[steps_model])
+    shape = ShapeConfig("calib", 32, 4, "train")
+    mspec = MeshSpec(tuple(mesh.devices.shape), tuple(mesh.axis_names))
+    w = build_workload(cfg, shape, mspec, LOCAL_CPU_HW)
+    plan = MemoryPlan(n_chunks=w.n_chunks, n_blocks=w.n_blocks,
+                      n_buffer=w.n_chunks, grad_compress="int8_ef",
+                      sync_mode="manual", zero_stage=3)
+    t_ov = estimate_runtime(w, plan).t_iteration
+    t_ser = estimate_runtime(w, _dc.replace(plan, overlap=False)).t_iteration
+    return {
+        "plan": plan.describe(),
+        "t_overlap_s": round(t_ov, 6),
+        "t_serial_s": round(t_ser, 6),
+        "hidden_comm_fraction": round(1.0 - t_ov / max(t_ser, 1e-12), 4),
+    }
+
+
 def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> dict:
     """Measure every (sync_mode, grad_compress, layout) config; return the
     backend entry. ``keys`` restricts to a subset (--dry-run smoke)."""
@@ -240,12 +280,12 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
 
     measured: dict[str, dict] = {}
     ef_factor = None
-    for key, sync_mode, compress, n_persist, zero_stage in CONFIGS:
+    for key, sync_mode, compress, n_persist, zero_stage, n_buffer in CONFIGS:
         if keys is not None and key not in keys:
             continue
         plan = MemoryPlan(n_chunks=4, n_blocks=2, n_persist=n_persist,
                           grad_compress=compress, sync_mode=sync_mode,
-                          zero_stage=zero_stage)
+                          zero_stage=zero_stage, n_buffer=n_buffer)
         art = build_train_step(cfg, plan, mesh, shape)
         compiled = art.lower(donate=False).compile()
         raw, corrected, s8, gather = _wire_bytes(compiled.as_text())
@@ -269,7 +309,7 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
     # t_reduce/t_gather price them separately)
     factors: dict[str, dict] = {"xla": {"none": 1.0}, "manual": {"none": 1.0}}
     xla_base = max(measured.get("xla/none", {}).get("wire_bytes_corrected", 0.0), 1.0)
-    for key, sync_mode, compress, _, _ in CONFIGS[1:]:
+    for key, sync_mode, compress, _, _, _ in CONFIGS[1:]:
         if key not in measured:
             continue
         m = measured[key]
@@ -281,7 +321,7 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
             factors["manual"]["gather_bf16"] = round(
                 m["wire_bytes_param_gather"]
                 / max(m["modeled_gather_factor1_bytes"], 1.0), 4)
-        elif key == "manual_zero2/int8_ef":
+        elif key in ("manual_zero2/int8_ef", "manual_zero3_buf/int8_ef"):
             pass  # recorded in `fit`; zero3 is the fit source for both factors
         else:
             factors["manual"][compress] = round(
@@ -293,6 +333,7 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
 
     entry = {
         "wire_factors": factors,
+        "overlap": modeled_overlap(steps_model, mesh),
         "fit": {
             "model": steps_model,
             "mesh": list(mesh.devices.shape),
@@ -350,6 +391,16 @@ def main() -> int:
                   "pages are being fetched more than once per layer "
                   "(duplication) or the per-page pipeline collapsed into a "
                   "full-cache gather (hoist regression)")
+            return 1
+        hf = entry.get("overlap", {}).get("hidden_comm_fraction")
+        print(f"[calibrate_wire --dry-run] hidden_comm_fraction={hf}")
+        if hf is None or not (0.02 <= hf <= 0.95):
+            print("[calibrate_wire --dry-run] FAIL: modeled hidden-comm "
+                  f"fraction {hf} outside the sane band [0.02, 0.95] — the "
+                  "overlap pricing no longer hides any manual comm under "
+                  "compute (max() degenerated to the serial sum) or claims "
+                  "to hide nearly the whole step (comm can only hide, never "
+                  "erase the compute critical path)")
             return 1
         print("[calibrate_wire --dry-run] OK")
         return 0

@@ -54,15 +54,23 @@ def plans_under_test(nc: int, nb: int) -> list[tuple[str, MemoryPlan]]:
 
 
 def manual_plans_under_test(nc: int, nb: int) -> list[tuple[str, MemoryPlan]]:
-    """Manual-sync ZeRO plans (ISSUE-4): both dataflows plus a buffered zero3,
-    so the CI --fail-threshold gate covers the lazy-gather path's memory
-    model, not just the xla lowering."""
+    """Manual-sync ZeRO plans (ISSUE-4/7): both dataflows plus a buffered
+    zero3, so the CI --fail-threshold gate covers the lazy-gather path's
+    memory model, not just the xla lowering. The ISSUE-7 rows pin the
+    overlap machinery: "manual_zero3_overlap" compiles the prefetch
+    pipeline (double-buffered gathers, scan-carried weights) and
+    "manual_zero3_serial" its overlap=False twin — their memory must track
+    the same estimate, since overlap shifts *when* collectives run, not
+    what is resident."""
     mk = lambda **kw: MemoryPlan(nc, nb, grad_compress="int8_ef",  # noqa: E731
                                  sync_mode="manual", **kw)
     return [
         ("manual_zero2", mk(zero_stage=2)),
         ("manual_zero3", mk(zero_stage=3)),
         ("manual_zero3_buf", mk(zero_stage=3, n_buffer=nc)),
+        ("manual_zero3_overlap", mk(zero_stage=3, n_buffer=nc, microbatch=2)),
+        ("manual_zero3_serial",
+         mk(zero_stage=3, n_buffer=nc, microbatch=2, overlap=False)),
     ]
 
 

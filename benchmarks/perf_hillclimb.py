@@ -69,11 +69,41 @@ def run(cell: str, variant: str, out_path: str | None):
     return rec
 
 
+def overlap_bench(cell: str) -> dict:
+    """ISSUE-7 acceptance row: the overlapped manual zero3 schedule's
+    modeled step time vs the serial (``overlap=False``) schedule on the
+    *same* plan and workload — the pre-overlap baseline every earlier
+    BENCH_train.json priced. Manual sync needs tp == 1, so the cell is
+    evaluated on the pod folded to pure DP (the same fold the autotuner's
+    dp_only candidates use)."""
+    from repro.configs import get_config, get_shape
+    from repro.core import TPU_V5E, SINGLE_POD, build_workload, estimate_runtime
+    from repro.core.hardware import MeshSpec
+    from repro.core.plan import MemoryPlan
+
+    arch, shape = CELLS[cell]
+    cfg = get_config(arch)
+    dp = MeshSpec((SINGLE_POD.n_chips,), ("data",))
+    w = build_workload(cfg, get_shape(shape), dp, TPU_V5E)
+    plan = MemoryPlan(w.n_chunks, w.n_blocks, n_buffer=w.n_chunks,
+                      grad_compress="int8_ef", sync_mode="manual", zero_stage=3)
+    t_ov = estimate_runtime(w, plan).t_iteration
+    t_ser = estimate_runtime(
+        w, dataclasses.replace(plan, overlap=False)).t_iteration
+    return {
+        "plan": plan.describe(),
+        "overlap_t_iter": t_ov,
+        "serial_t_iter": t_ser,
+        "overlap_speedup": t_ser / max(t_ov, 1e-12),
+    }
+
+
 def bench_out(path: str, cell: str = "stablelm"):
     """CI artifact mode: recompile the cell's excluded-move baseline and
     accepted-best plans and emit ``BENCH_train.json`` — roofline terms,
     XLA buffer assignment, and modeled iteration time per variant, plus the
-    modeled speedup. Plan search and roofline are deterministic; the
+    modeled speedup, and the overlapped-vs-serial manual zero3 comparison
+    (ISSUE-7). Plan search and roofline are deterministic; the
     lower/compile wall-time fields jitter run to run."""
     arch, shape = CELLS[cell]
     variants = {v: run(cell, v, None) for v in ("baseline", "best")}
@@ -85,12 +115,15 @@ def bench_out(path: str, cell: str = "stablelm"):
         "variants": variants,
         "modeled_speedup": (variants["baseline"]["modeled_t_iter"]
                             / max(variants["best"]["modeled_t_iter"], 1e-12)),
+        "zero3_overlap": overlap_bench(cell),
     }
     with open(path, "w") as f:
         json.dump(bench, f, indent=2)
         f.write("\n")
+    ov = bench["zero3_overlap"]
     print(f"[hillclimb] wrote {path} "
-          f"(modeled speedup x{bench['modeled_speedup']:.3f})")
+          f"(modeled speedup x{bench['modeled_speedup']:.3f}, "
+          f"zero3 overlap x{ov['overlap_speedup']:.3f} vs serial)")
 
 
 def main():

@@ -11,7 +11,9 @@ The --resume-demo flag trains, simulates a crash halfway, then restarts from
 the latest checkpoint and verifies the loss continues from where it left off.
 --plan zero2/zero3 shards the model states (manual compressed sync by
 default; the printed plan summary shows the ZeRO-3 lazy-gather memory win
-over the up-front-gather zero2 layout). On a 1-device host the manual plans
+over the up-front-gather zero2 layout). --overlap on|off toggles the manual
+path's comm/compute overlap (ISSUE-7); the summary prints the serial-vs-
+overlapped modeled step time either way. On a 1-device host the manual plans
 fall back to the numerics-identical local-math path.
 """
 import argparse
@@ -39,13 +41,16 @@ def make_plan(args, nc: int, nb: int) -> MemoryPlan:
         if args.sync_mode != "xla" or args.compress != "none":
             plan = dataclasses.replace(
                 plan, sync_mode=args.sync_mode, grad_compress=args.compress)
-        return plan
-    # ZeRO-sharded: manual compressed sync is the point of these plans
-    return MemoryPlan(
-        nc, nb, n_persist=0, n_buffer=args.n_buffer,
-        zero_stage=3 if args.plan == "zero3" else 2,
-        sync_mode=args.sync_mode, grad_compress=args.compress,
-    )
+    else:
+        # ZeRO-sharded: manual compressed sync is the point of these plans
+        plan = MemoryPlan(
+            nc, nb, n_persist=0, n_buffer=args.n_buffer,
+            zero_stage=3 if args.plan == "zero3" else 2,
+            sync_mode=args.sync_mode, grad_compress=args.compress,
+        )
+    if args.overlap == "off":
+        plan = dataclasses.replace(plan, overlap=False)
+    return plan
 
 
 def plan_summary(cfg, shape, mesh, plan) -> str:
@@ -66,6 +71,19 @@ def plan_summary(cfg, shape, mesh, plan) -> str:
         line += (f" (zero2 would be {est2.peak / 1e9:.3f}GB: lazy per-chunk "
                  f"gather saves {(est2.peak - est.peak) / 1e6:.0f}MB "
                  f"gathered-params + grad-workspace)")
+    if kind is not None:
+        # ISSUE-7: the overlap knob changes the schedule, so show both
+        # pricings — the hidden-comm delta is the reason --overlap exists
+        from repro.core import estimate_runtime
+
+        t_here = estimate_runtime(w, plan).t_iteration
+        t_twin = estimate_runtime(
+            w, dataclasses.replace(plan, overlap=not plan.overlap)).t_iteration
+        t_ov, t_ser = ((t_here, t_twin) if plan.overlap else (t_twin, t_here))
+        line += (f" modeled_t_iter={t_here * 1e3:.2f}ms [overlap="
+                 f"{'on' if plan.overlap else 'off'}: overlapped "
+                 f"{t_ov * 1e3:.2f}ms vs serial {t_ser * 1e3:.2f}ms, comm "
+                 f"hidden {(1 - t_ov / max(t_ser, 1e-12)) * 100:.1f}%]")
     return line
 
 
@@ -87,6 +105,12 @@ def main():
                     default=None,
                     help="gradient wire compression (default: int8_ef for "
                          "manual plans, none for xla)")
+    ap.add_argument("--overlap", choices=["on", "off"], default="on",
+                    help="manual-path comm/compute overlap (double-buffered "
+                         "gather prefetch + deferred-accumulation reduce-"
+                         "scatter); off builds and prices the serial "
+                         "schedule — the printed summary shows both modeled "
+                         "step times either way")
     args = ap.parse_args()
     if args.sync_mode is None:
         args.sync_mode = "xla" if args.plan == "resident" else "manual"

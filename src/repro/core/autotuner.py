@@ -102,6 +102,10 @@ def search(
     # costs nothing and the search is honest about when compression pays.
     compress: str = "auto",  # "off" | "on" | "auto"
     sync: str = "auto",  # "xla" | "manual" | "auto": who owns the grad reduce
+    # comm/compute overlap on the manual path: candidates are priced with the
+    # prefetch/deferred-accumulation pipeline on (plan.overlap). Pass False to
+    # score the serial manual schedule (PR-6 baseline) instead.
+    overlap: bool = True,
 ) -> SearchResult:
     """Find the fastest plan fitting in per-chip memory."""
     t0 = time.time()
@@ -149,7 +153,7 @@ def search(
         ubs = [m for m in microbatches if seqs / m >= 1 and (seqs / m) % 1 == 0] or [1]
         best, evaluated = _search_inner(
             wl, capacity, ubs, sp_vals, gc_vals, use_dp, real_tp, allow_host,
-            allow_swap, max_checkpoint_points, best, evaluated,
+            allow_swap, max_checkpoint_points, best, evaluated, overlap,
         )
     w_final = w
     if best is None:
@@ -167,7 +171,8 @@ def search(
 
 
 def _search_inner(w, capacity, ubs, sp_vals, gc_vals, use_dp, real_tp, allow_host,
-                  allow_swap, max_checkpoint_points, best, evaluated):
+                  allow_swap, max_checkpoint_points, best, evaluated,
+                  overlap=True):
     nc, nb = w.n_chunks, w.n_blocks
     for ub, use_sp, (gc, sync) in itertools.product(ubs, sp_vals, gc_vals):
         manual = sync == "manual"
@@ -197,7 +202,7 @@ def _search_inner(w, capacity, ubs, sp_vals, gc_vals, use_dp, real_tp, allow_hos
                         n_swap=n_swap, n_checkpoint=n_ckpt, microbatch=ub,
                         seq_shard_acts=use_sp, dp_only=use_dp, ckpt_group=cg,
                         host_params=hp, grad_compress=gc, sync_mode=sync,
-                        zero_stage=zero_stage,
+                        zero_stage=zero_stage, overlap=overlap,
                     )
 
                 if manual:

@@ -90,6 +90,33 @@ class MemoryPlan:
     #   2 — legacy up-front gather: full bf16 params live for the whole step
     #       (ZeRO-2-style memory), no re-gathers.
     zero_stage: int = 3
+    # comm/compute overlap on the manual path (docs/cost_model.md §2):
+    #   True  — the step builder pipelines the zero3 lazy gathers (chunk k+1's
+    #           all-gather issued during chunk k's matmuls, barrier-ordered
+    #           like serve/paging's double buffer — needs n_buffer >= 2, see
+    #           gather_prefetch_depth), defers each microbatch's gradient
+    #           accumulate so the reduce-scatter overlaps the next backward,
+    #           and issues host param fetches before the layer scan; the cost
+    #           model prices per-chunk comm as max(compute, comm);
+    #   False — everything runs inline and the cost model prices comm serially
+    #           (sum) — the pre-overlap baseline the benchmarks compare to.
+    # The xla path ignores this knob: GSPMD's scheduler owns overlap there.
+    overlap: bool = True
+
+    @property
+    def gather_prefetch_depth(self) -> int:
+        """Gather buffers the zero3 prefetch pipeline may hold in flight.
+
+        2 (double-buffered: prefetch + execute) when overlap is on, the plan
+        syncs manually at zero_stage 3, and ``n_buffer >= 2`` gives the remat
+        policy room to keep both gathered chunks live; 1 (serial, gather at
+        point of use) otherwise — the documented serial fallback for
+        ``n_buffer < 2``.
+        """
+        if (self.overlap and self.sync_mode == "manual"
+                and self.zero_stage == 3 and self.n_buffer >= 2):
+            return 2
+        return 1
 
     def __post_init__(self):
         assert 0 <= self.n_persist <= self.n_chunks
@@ -213,6 +240,8 @@ class MemoryPlan:
             comp += f" sync={self.sync_mode}"
             if self.n_persist < self.n_chunks:
                 comp += f" zstage={self.zero_stage}"
+            if not self.overlap:
+                comp += " overlap=off"
         return (
             f"persist={self.n_persist}/{self.n_chunks} buffer={self.n_buffer} "
             f"host={self.n_host} swap={self.n_swap} ckpt={self.n_checkpoint} "

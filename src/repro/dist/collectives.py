@@ -64,7 +64,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import optimization_barrier, shard_map
 
 
 def _mesh_size(mesh) -> int:
@@ -292,7 +292,7 @@ _gather_param_lazy.defvjp(_gather_param_lazy_fwd, _gather_param_lazy_bwd)
 
 
 def gather_param_lazy(w: jax.Array, err, axis_names, dim: int,
-                      compress: str = "int8_ef") -> jax.Array:
+                      compress: str = "int8_ef", anchor=None) -> jax.Array:
     """Just-in-time bf16 param all-gather whose transpose is the compressed
     reduce-scatter (the manual ZeRO-3 dataflow; see train/sync.py).
 
@@ -314,8 +314,20 @@ def gather_param_lazy(w: jax.Array, err, axis_names, dim: int,
     produces — so ``jax.grad`` w.r.t. ``(w, err)`` yields
     ``(grad_shard, new_err)`` and the caller carries the residual as explicit
     state keyed by chunk.
+
+    ``anchor`` double-buffers the gather (the training twin of
+    serve/paging's prefetch ordering): when given, the gathered leaf is
+    ``optimization_barrier``-paired with the anchor value, so XLA may issue
+    this chunk's all-gather as soon as the anchor exists — during the
+    previous chunk's matmuls — but never earlier (pipeline depth stays
+    bounded). The barrier is differentiable (compat.optimization_barrier
+    barriers cotangents through a custom_vjp where needed), so the
+    reduce-scatter transpose above is untouched.
     """
-    return _gather_param_lazy(tuple(_names(axis_names)), int(dim), compress, w, err)
+    g = _gather_param_lazy(tuple(_names(axis_names)), int(dim), compress, w, err)
+    if anchor is not None:
+        g, _ = optimization_barrier((g, anchor))
+    return g
 
 
 # Tree-level dispatch (replicated vs ZeRO-sharded leaves) lives in

@@ -339,6 +339,14 @@ class Run:
     # params so the gather VJP's new residuals come out stacked per repeat
     lazy_gather: Any = None
     ef: Any = None
+    # double-buffered gather prefetch (plan.gather_prefetch_depth >= 2):
+    # inside the run scan, repeat k+1's all-gathers are issued during repeat
+    # k's matmuls, barrier-ordered after repeat k-1's output — the training
+    # twin of serve/paging's cold-page prefetch. Only meaningful for
+    # buffered lazy-gather runs (the carried gathered weights are saved
+    # FWD->BWD anyway); everything else falls back to the serial inline
+    # gather automatically.
+    prefetch: bool = False
 
 
 def apply_runs(
@@ -364,6 +372,12 @@ def apply_runs(
         g = max(1, min(g, run.n_repeats))
         while run.n_repeats % g:
             g -= 1  # group must tile the run
+
+        if (run.prefetch and lazy and run.buffered and run.act_policy == "none"
+                and g == 1 and run.n_repeats >= 2):
+            x, aux_total = _apply_run_prefetched(
+                run, x, aux_total, cfg, memory=memory, attn_impl=attn_impl)
+            continue
 
         if g == 1:
             def body(carry, sl, _run=run, _pol=pol):
@@ -414,6 +428,61 @@ def apply_runs(
         else:
             (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), scan_xs)
     return x, aux_total
+
+
+def _apply_run_prefetched(run: Run, x, aux_total, cfg, *, memory, attn_impl):
+    """Double-buffered lazy-gather pipeline over one buffered run.
+
+    Serial inline gathering (the non-prefetch path) only lets repeat k's
+    all-gather start once repeat k-1's output exists — gather and matmuls
+    alternate. Here repeat 0's weights are gathered before the scan and the
+    scan body, at repeat k, (a) issues repeat k+1's gathers *anchored on the
+    incoming activation* (repeat k-1's output — the earliest point the
+    pipeline may start them, and nothing orders them after repeat k's
+    compute) and (b) applies repeat k with the weights carried from the
+    previous iteration. Exactly two repeats' gathered weights are ever in
+    flight (``plan.gather_prefetch_depth == 2``), mirroring serve/paging's
+    ``optimization_barrier`` cold-page double buffer.
+
+    The scan runs ``n_repeats - 1`` iterations over the ``[1:]`` param/EF
+    slices, with a trailing un-scanned apply for the last repeat — NOT a
+    wrap-around gather of repeat 0, which would consume repeat 0's EF
+    residual twice and corrupt the error-feedback semantics (the residual's
+    cotangents from two gathers would add).
+
+    Restricted to buffered ``act_policy="none"`` runs: the carried gathered
+    weights become per-iteration scan AD residuals, which is free exactly
+    when the run saves them FWD->BWD anyway. Unbuffered/checkpointed runs
+    keep the serial inline gather (the documented fallback).
+    """
+
+    def gather_repeat(bp, efr, anchor=None, _run=run):
+        return {
+            k: _run.lazy_gather(bp[k], None if efr is None else efr[k],
+                                int(k[3:]), anchor=anchor)
+            for k in bp
+        }
+
+    first = jax.tree.map(lambda a: a[0], (run.params, run.ef))
+    w0 = gather_repeat(*first)
+    rest_xs = jax.tree.map(lambda a: a[1:], (run.params, run.ef))
+
+    def body(carry, sl):
+        x, aux, w_cur = carry
+        bp, ef = sl
+        w_next = gather_repeat(bp, ef, anchor=x)
+        x, a = apply_superblock(
+            w_cur, x, cfg, gather_specs=None, remat_policy=None,
+            lazy_gather=None, ef=None, memory=memory, attn_impl=attn_impl,
+        )
+        return (x, aux + a, w_next), None
+
+    (x, aux_total, w_last), _ = jax.lax.scan(body, (x, aux_total, w0), rest_xs)
+    x, a = apply_superblock(
+        w_last, x, cfg, gather_specs=None, remat_policy=None,
+        lazy_gather=None, ef=None, memory=memory, attn_impl=attn_impl,
+    )
+    return x, aux_total + a
 
 
 def default_runs(cfg: ModelConfig, params: dict) -> list[Run]:

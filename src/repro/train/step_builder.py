@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.plan import MemoryPlan
 from repro.dist import collectives as COLL
@@ -342,6 +343,21 @@ def build_train_step(
         def loss_fn(params, batch):
             M.set_activation_sharder(act_sharder)
             fparams = params if full else fetch(params)
+            if not full and plan.overlap:
+                # overlap the loss-head fetches with the layer scan: the
+                # final_norm/head device_puts (host upload and/or ZeRO
+                # gather) are consumed only after the scan, so left alone
+                # XLA may sink them to the loss head and pay their latency
+                # serially. Bundling them with the embed subtree orders the
+                # fetches at program start — in flight during the whole
+                # forward — without delaying the scan (which reads only the
+                # un-barriered run params).
+                keys = [k for k in ("final_norm", "head")
+                        if fetch_specs.get(k) is not None and k in fparams]
+                if keys:
+                    bundled, _ = optimization_barrier(
+                        ({k: fparams[k] for k in keys}, fparams["embed"]))
+                    fparams = {**fparams, **bundled}
             h, aux = M.forward(
                 fparams, batch, cfg, runs=make_runs(params, full=full),
                 attn_impl=attn_impl,
@@ -381,7 +397,7 @@ def build_train_step(
                 lambda ls: SYNC.LeafSync(None if ls.dim is None else ls.dim - 1),
                 ls_tree, is_leaf=_is_ls)
 
-        def subtree_gather(pp, epp, ls_sub, name=False):
+        def subtree_gather(pp, epp, ls_sub, name=False, anchor=None):
             flat_w, td = jax.tree.flatten(pp)
             flat_ls = td.flatten_up_to(ls_sub)
             flat_e = (td.flatten_up_to(epp) if epp is not None
@@ -391,7 +407,8 @@ def build_train_step(
                 if ls.dim is None:
                     out.append(w)
                     continue
-                g = COLL.gather_param_lazy(w, e, axes, ls.dim, compress)
+                g = COLL.gather_param_lazy(w, e, axes, ls.dim, compress,
+                                           anchor=anchor)
                 out.append(checkpoint_name(g, M.GATHERED_W) if name else g)
             return td.unflatten(out)
 
@@ -411,9 +428,15 @@ def build_train_step(
                     act_policy=r.act_policy, buffered=r.buffered,
                     persistent=False, gather_specs=None,
                     ckpt_group=plan.ckpt_group,
-                    lazy_gather=lambda pp, epp, j, _ls=ls_rep: subtree_gather(
-                        pp, epp, _ls[f"pos{j}"], name=True),
+                    lazy_gather=lambda pp, epp, j, anchor=None,
+                    _ls=ls_rep: subtree_gather(
+                        pp, epp, _ls[f"pos{j}"], name=True, anchor=anchor),
                     ef=None if ef is None else ef["runs"][i],
+                    # double-buffered gather prefetch (model.apply_runs):
+                    # active only for buffered runs under an overlap plan
+                    # with n_buffer >= 2 — everything else keeps the serial
+                    # inline gather
+                    prefetch=plan.gather_prefetch_depth >= 2,
                 ))
             return out
 

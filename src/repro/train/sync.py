@@ -53,7 +53,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import optimization_barrier, shard_map
 from repro.dist import collectives as COLL
 from repro.dist import sharding as SH
 from repro.models.layers import ParamDef
@@ -65,7 +65,8 @@ _is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)  # noqa: E731
 # ---------------------------------------------------------------------------
 # Shared accumulate skeleton (both sync paths, all manual kinds)
 # ---------------------------------------------------------------------------
-def accumulate_grads(micro_grad, batch, microbatch, ef, acc_like, pin=None):
+def accumulate_grads(micro_grad, batch, microbatch, ef, acc_like, pin=None,
+                     overlap=False):
     """Microbatch gradient accumulation, shared by every sync strategy.
 
     ``micro_grad(mb_batch, ef) -> (grads, total, ce, ef)`` computes one
@@ -76,8 +77,15 @@ def accumulate_grads(micro_grad, batch, microbatch, ef, acc_like, pin=None):
     accumulation carry: the manual ZeRO kinds pass the *local* state params
     (shard-sized leaves), because each microbatch's grads collapse to shard
     size before they are accumulated. ``pin`` re-asserts gradient shardings
-    on the carry (omitted inside shard_map). Returns
-    ``(grads, total, ce, ef)``."""
+    on the carry (omitted inside shard_map).
+
+    ``overlap`` defers each microbatch's accumulate by one iteration:
+    iteration m folds microbatch m-1's *already-synced* grads into the
+    accumulator while microbatch m's reduce-scatter is still draining, so
+    the sync's only consumer is the loop carry and the collective can hide
+    under the next microbatch's backward (docs/cost_model.md §2). The adds
+    are the serial path's exact fp32 adds, shifted one iteration — numerics
+    are bit-identical. Returns ``(grads, total, ce, ef)``."""
     pin = pin if pin is not None else (lambda g: g)
     if microbatch == 1:
         grads, total, ce, ef = micro_grad(batch, ef)
@@ -87,17 +95,38 @@ def accumulate_grads(micro_grad, batch, microbatch, ef, acc_like, pin=None):
         return x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:])
 
     micro = jax.tree.map(split, batch)
-
-    def acc_body(carry, mb_batch):
-        g_acc, l_acc, ef_c = carry
-        g, tot, _ce, ef_c = micro_grad(mb_batch, ef_c)
-        g = pin(g)
-        g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
-        return (g_acc, l_acc + tot, ef_c), None
-
     zeros = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), acc_like))
-    (grads, total, ef), _ = jax.lax.scan(
-        acc_body, (zeros, jnp.zeros((), jnp.float32), ef), micro)
+
+    if overlap:
+
+        def acc_body(carry, mb_batch):
+            g_acc, g_pend, l_acc, ef_c = carry
+            g, tot, _ce, ef_c = micro_grad(mb_batch, ef_c)
+            g = pin(g)
+            # Fold the *previous* microbatch's synced grads; this
+            # microbatch's tree only flows into the carry, off the critical
+            # path. The barrier pairs the fresh tree with the fold so at
+            # most one synced tree is ever pending (the double-buffer idiom
+            # from serve/paging).
+            g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g_pend)
+            g_pend = jax.tree.map(lambda a, b: b.astype(a.dtype), g_acc, g)
+            g_pend, _ = optimization_barrier((g_pend, g_acc))
+            return (g_acc, g_pend, l_acc + tot, ef_c), None
+
+        (g_acc, g_pend, total, ef), _ = jax.lax.scan(
+            acc_body, (zeros, zeros, jnp.zeros((), jnp.float32), ef), micro)
+        grads = jax.tree.map(lambda a, b: a + b, g_acc, g_pend)
+    else:
+
+        def acc_body(carry, mb_batch):
+            g_acc, l_acc, ef_c = carry
+            g, tot, _ce, ef_c = micro_grad(mb_batch, ef_c)
+            g = pin(g)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+            return (g_acc, l_acc + tot, ef_c), None
+
+        (grads, total, ef), _ = jax.lax.scan(
+            acc_body, (zeros, jnp.zeros((), jnp.float32), ef), micro)
     grads = pin(jax.tree.map(lambda g: g / microbatch, grads))
     return grads, total / microbatch, total / microbatch, ef
 
@@ -386,7 +415,8 @@ class ManualSync:
                     return g, tot, ce, ef_c
 
             grads, total, ce, ef = accumulate_grads(
-                micro_grad, batch, microbatch, ef, acc_like=state["params"])
+                micro_grad, batch, microbatch, ef, acc_like=state["params"],
+                overlap=self.plan.overlap)
 
             # losses were computed on the local batch shard; average them
             total = jax.lax.pmean(total, axes)

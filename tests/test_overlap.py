@@ -1,0 +1,329 @@
+"""Overlap-aware manual sync (ISSUE-7).
+
+Tentpole acceptance beyond the parity suites in test_manual_sync.py /
+test_zero3_lazy.py:
+
+  * loss parity within bf16 tolerance over 10 steps for the overlapped
+    manual schedules vs their inline (``overlap=False``) twins, across
+    zero2 / zero3 / prefetched-buffered zero3 — the overlap machinery
+    (double-buffered gather prefetch, deferred-accumulation reduce-scatter)
+    reorders collectives but must not change what is computed;
+  * the prefetch pipeline is visible in the lowered program: chunk k+1's
+    all-gather output is ``optimization_barrier``-paired with the incoming
+    activation (chunk k-1's output), the same double-buffer idiom as
+    serve/paging — and the s8 payloads still survive on the wire;
+  * the cost model's overlap term: ``overlap=True`` prices each chunk at
+    max(compute, comm), ``overlap=False`` serializes (sum), so the
+    overlapped estimate is *strictly* below the serial baseline whenever a
+    chunk has both compute and comm — the BENCH_train.json acceptance;
+  * ``gather_prefetch_depth`` encodes the serial fallback: depth 2 only
+    for overlapped manual zero3 with ``n_buffer >= 2``, else 1;
+  * property suite: ``zero3_prefetch_schedule`` never holds more than
+    ``max(n_buffer, 1)`` gather buffers live and never exceeds the two
+    in-flight gather units ``estimate_memory`` charges, for arbitrary
+    ``(n_chunks, n_buffer, microbatch)``.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import cost_model as CM
+from repro.core.plan import MemoryPlan
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.optim.adam import AdamConfig
+from repro.train.step_builder import build_train_step
+
+N_DEV = len(jax.devices())
+TINY = reduced(ARCHS["llama3-405b"])
+SHAPE = ShapeConfig("tiny", 32, 16, "train")
+DEEP = dataclasses.replace(reduced(ARCHS["llama3-405b"]), num_layers=8,
+                           d_model=256, d_ff=1024, vocab_size=1024)
+
+needs_multi_device = pytest.mark.skipif(
+    N_DEV < 2 or 16 % N_DEV != 0,
+    reason="overlap parity needs a multi-device mesh (CI forces 4)",
+)
+
+
+def dp_mesh(n=None):
+    n = n if n is not None else N_DEV
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def zero_plan(**kw):
+    kw.setdefault("grad_compress", "int8_ef")
+    kw.setdefault("sync_mode", "manual")
+    return MemoryPlan(n_chunks=4, n_blocks=2, **kw)
+
+
+def run_steps(plan, mesh, steps=10, lr=3e-3, seed=0):
+    art = build_train_step(TINY, plan, mesh, SHAPE, adam=AdamConfig(lr=lr))
+    state = art.init(jax.random.PRNGKey(seed))
+    jfn = jax.jit(art.fn, donate_argnums=(0,))
+    pipe = SyntheticTokenPipeline(TINY, SHAPE, seed=0)
+    losses, metrics = [], None
+    for _ in range(steps):
+        state, metrics = jfn(state, pipe.next_sync())
+        losses.append(float(metrics["loss"]))
+    return art, state, losses, metrics
+
+
+def _deep_workload():
+    from repro.core import TPU_V5E, build_workload
+    from repro.core.hardware import MeshSpec
+
+    return build_workload(DEEP, ShapeConfig("fid", 32, 16, "train"),
+                          MeshSpec((4,), ("data",)), TPU_V5E)
+
+
+# ---------------------------------------------------------------------------
+# numerics parity: overlapped vs inline schedules
+# ---------------------------------------------------------------------------
+@needs_multi_device
+@pytest.mark.parametrize("plan", [
+    zero_plan(zero_stage=2, microbatch=2),
+    zero_plan(zero_stage=3, microbatch=2),
+    zero_plan(zero_stage=3, n_buffer=4),
+], ids=["zero2", "zero3", "zero3_buffered"])
+def test_overlap_parity_prefetched_vs_inline(plan):
+    """Acceptance: the overlapped program (gather prefetch for the buffered
+    cell, deferred-accumulation reduce-scatter for the microbatched cells)
+    tracks the inline ``overlap=False`` twin within bf16 tolerance over 10
+    steps. The deferred accumulation performs the serial path's exact fp32
+    adds one iteration later, and the prefetch pipeline issues the same
+    gathers earlier — only op *ordering* changes, so bf16 rounding drift
+    from re-fused matmuls is the only tolerated difference."""
+    mesh = dp_mesh()
+    assert plan.overlap  # overlap is the default
+    _, _, l_ov, m_ov = run_steps(plan, mesh)
+    _, _, l_ser, _ = run_steps(dataclasses.replace(plan, overlap=False), mesh)
+    assert all(np.isfinite(l_ov))
+    np.testing.assert_allclose(l_ov, l_ser, rtol=2e-2)
+    assert float(m_ov["ef_norm"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# compiled-program structure: barrier-ordered prefetch, s8 on the wire
+# ---------------------------------------------------------------------------
+def _act_tensor() -> str:
+    """StableHLO type of the per-device scan activation — the prefetch
+    anchor's second barrier operand."""
+    return (f"tensor<{SHAPE.global_batch // N_DEV}x{SHAPE.seq_len}"
+            f"x{TINY.d_model}xbf16>")
+
+
+def _prefetch_anchor_lines(txt: str) -> list[str]:
+    """Barrier ops of the prefetch-anchor shape: exactly two operands,
+    (gathered weight, activation). Remat also lowers to optimization_barrier
+    but bundles dozens of residuals — operand arity tells them apart."""
+    act = _act_tensor()
+    out = []
+    for ln in txt.splitlines():
+        if "optimization_barrier" not in ln or ":" not in ln:
+            continue
+        types = ln.rsplit(":", 1)[1].split(",")
+        if len(types) == 2 and act in types[1]:
+            out.append(ln.strip())
+    return out
+
+
+
+@needs_multi_device
+def test_prefetch_pipeline_barrier_orders_gathers_in_hlo():
+    """The buffered zero3 program issues chunk k+1's all-gather inside the
+    scan body barrier-paired with the incoming activation (chunk k-1's
+    output) — the serve/paging double-buffer idiom — so the gather cannot
+    sink to its point of use. XLA consumes the barriers during scheduling,
+    so the witness lives in the *lowered* text: optimization_barrier ops
+    pairing a full gathered-weight tensor with the activation tensor. The
+    serial twin (overlap=False) must emit none, and the compiled overlapped
+    program must still move s8 payloads (compression survives the
+    pipeline)."""
+    mesh = dp_mesh()
+    plan = zero_plan(zero_stage=3, n_buffer=4)
+    art = build_train_step(TINY, plan, mesh, SHAPE)
+    lowered = art.lower(donate=False)
+    txt = lowered.as_text()
+    # the anchor's operands are (gathered weights, activation): the weight
+    # paired with the rank-3 activation that orders the gather after chunk
+    # k-1's output
+    paired = _prefetch_anchor_lines(txt)
+    assert paired, "no barrier pairs a gather with the scan activation"
+
+    hlo = lowered.compile().as_text()
+    s8_a2a = [ln for ln in hlo.splitlines() if "all-to-all" in ln and "s8[" in ln]
+    assert s8_a2a, "s8 reduce-scatter payloads must survive the prefetch"
+
+    art_ser = build_train_step(
+        TINY, dataclasses.replace(plan, overlap=False), mesh, SHAPE)
+    txt_ser = art_ser.lower(donate=False).as_text()
+    assert "optimization_barrier" not in txt_ser, (
+        "overlap=False is the serial fallback: no prefetch anchors")
+
+
+@needs_multi_device
+def test_serial_fallback_below_double_buffer_floor():
+    """n_buffer < 2 cannot double-buffer (nothing to prefetch into), so the
+    plan reports depth 1 and the lowered program gathers inline — no
+    barrier ever pairs a gather with the scan activation. That is the
+    documented serial fallback."""
+    mesh = dp_mesh()
+    plan = zero_plan(zero_stage=3, n_buffer=1)
+    assert plan.gather_prefetch_depth == 1
+    art = build_train_step(TINY, plan, mesh, SHAPE)
+    txt = art.lower(donate=False).as_text()
+    assert not _prefetch_anchor_lines(txt), (
+        "below the floor there must be no prefetch anchors")
+
+
+# ---------------------------------------------------------------------------
+# cost model: the overlap term
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mk", [
+    lambda nc, nb: MemoryPlan(nc, nb, grad_compress="int8_ef",
+                              sync_mode="manual", zero_stage=2),
+    lambda nc, nb: MemoryPlan(nc, nb, grad_compress="int8_ef",
+                              sync_mode="manual", zero_stage=3),
+    lambda nc, nb: MemoryPlan(nc, nb, n_buffer=nc, grad_compress="int8_ef",
+                              sync_mode="manual", zero_stage=3),
+], ids=["zero2", "zero3", "zero3_buffered"])
+def test_overlap_pricing_strictly_beats_serial(mk):
+    """Acceptance (BENCH_train.json): t_overlap = max(compute, comm) per
+    chunk is *strictly* below the serial sum whenever any chunk has both
+    compute and comm — true for every manual plan on a real workload."""
+    w = _deep_workload()
+    plan = mk(w.n_chunks, w.n_blocks)
+    t_ov = CM.estimate_runtime(w, plan)
+    t_ser = CM.estimate_runtime(w, dataclasses.replace(plan, overlap=False))
+    assert t_ov.t_fwd < t_ser.t_fwd
+    assert t_ov.t_bwd < t_ser.t_bwd
+    assert t_ov.t_iteration < t_ser.t_iteration
+
+
+def test_overlap_flag_is_inert_on_the_xla_path():
+    """GSPMD owns overlap on the xla path; the knob prices nothing there."""
+    w = _deep_workload()
+    plan = MemoryPlan(w.n_chunks, w.n_blocks, grad_compress="int8_ef")
+    t_on = CM.estimate_runtime(w, plan)
+    t_off = CM.estimate_runtime(w, dataclasses.replace(plan, overlap=False))
+    assert t_on.t_iteration == t_off.t_iteration
+
+
+def test_autotuner_threads_overlap_into_candidates():
+    """search(overlap=...) stamps the flag on the winning plan, and scoring
+    with the serial schedule can only slow the projected step down."""
+    from repro.core import search
+
+    w = _deep_workload()
+    res_ov = search(w, compress="on", sync="manual",
+                    allow_host=False, allow_swap=False)
+    res_ser = search(w, compress="on", sync="manual",
+                     allow_host=False, allow_swap=False, overlap=False)
+    assert res_ov.feasible and res_ser.feasible
+    assert res_ov.plan.overlap and not res_ser.plan.overlap
+    assert res_ov.runtime.t_iteration <= res_ser.runtime.t_iteration
+
+
+DEPTH_LATTICE = [
+    # (sync_mode, zero_stage, n_buffer, overlap) -> depth
+    (("manual", 3, 4, True), 2),
+    (("manual", 3, 2, True), 2),
+    (("manual", 3, 1, True), 1),   # serial fallback: below the floor
+    (("manual", 3, 0, True), 1),
+    (("manual", 3, 4, False), 1),  # overlap off: always inline
+    (("manual", 2, 4, True), 1),   # zero2 gathers up front, nothing to pipe
+    (("xla", 3, 4, True), 1),      # GSPMD owns xla-path prefetch
+]
+
+
+@pytest.mark.parametrize("cell,depth", DEPTH_LATTICE)
+def test_gather_prefetch_depth_lattice(cell, depth):
+    sync_mode, zero_stage, n_buffer, overlap = cell
+    plan = MemoryPlan(4, 2, n_buffer=n_buffer, sync_mode=sync_mode,
+                      zero_stage=zero_stage, overlap=overlap,
+                      grad_compress="int8_ef" if sync_mode == "manual" else "none")
+    assert plan.gather_prefetch_depth == depth
+
+
+# ---------------------------------------------------------------------------
+# property suite: the prefetch schedule's buffer discipline
+# ---------------------------------------------------------------------------
+@given(nb=st.integers(1, 10), nbuf=st.integers(0, 12),
+       microbatch=st.integers(1, 3))
+@settings(max_examples=40, deadline=None)
+def test_prefetch_schedule_never_exceeds_buffer_budget(nb, nbuf, microbatch):
+    """For arbitrary (n_chunks, n_buffer, microbatch) the overlap schedule
+    never holds more than max(n_buffer, 1) gather buffers live and never
+    has more gathers in flight than the double-buffer depth allows — the
+    same budget estimate_memory charges (n_buffer buffered chunks plus two
+    in-flight gather units)."""
+    nc = nb + 2  # embed + blocks + head, the MemoryPlan invariant
+    nbuf = min(nbuf, nc)
+    sched = CM.zero3_prefetch_schedule(nc, nbuf, microbatch=microbatch)
+    assert sched["max_live"] <= max(nbuf, 1)
+    depth = 2 if nbuf >= 2 else 1
+    assert sched["max_inflight"] <= depth - 1
+    # estimate_memory's in-flight charge (2 gather units) covers the
+    # schedule: one executing + at most depth-1 prefetched
+    assert sched["max_inflight"] + 1 <= 2
+
+    # the schedule's buffered set is exactly the plan's chunk_buffered set
+    plan = MemoryPlan(nc, nb, n_buffer=nbuf, grad_compress="int8_ef",
+                      sync_mode="manual", zero_stage=3)
+    assert {i for i in range(nc) if plan.chunk_buffered(i)} == \
+        {i for i in range(nc) if i >= nc - nbuf}
+    assert plan.gather_prefetch_depth == depth
+
+
+@given(nbuf=st.integers(2, 8))
+@settings(max_examples=8, deadline=None)
+def test_prefetch_schedule_uses_the_pipeline(nbuf):
+    """With a double-bufferable window the schedule actually prefetches:
+    at least one gather is in flight ahead of compute."""
+    nc = nbuf + 2
+    sched = CM.zero3_prefetch_schedule(nc, nbuf)
+    assert sched["max_inflight"] == 1
+    # forcing the serial depth drains the pipeline
+    assert CM.zero3_prefetch_schedule(nc, nbuf, prefetch_depth=1)[
+        "max_inflight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# calibration: the informational overlap record, and legacy-JSON loading
+# ---------------------------------------------------------------------------
+def test_calibration_overlap_record_and_legacy_load(tmp_path):
+    """The regenerated packaged calibration carries the informational
+    ``overlap`` record (modeled hidden-comm fraction inside calibrate_wire's
+    dry-run band), and a pre-ISSUE-7 calibration *without* the key loads and
+    prices identically — nothing in cost_model reads it, so per-key
+    defaulting (schema v2) is undisturbed."""
+    import json
+    import os
+
+    packaged = os.path.join(os.path.dirname(CM.__file__),
+                            "wire_calibration.json")
+    with open(packaged) as f:
+        doc = json.load(f)
+    assert doc["version"] == CM.CALIBRATION_SCHEMA_VERSION == 2
+    entry = next(iter(doc["backends"].values()))
+    frac = entry["overlap"]["hidden_comm_fraction"]
+    assert 0.02 <= frac <= 0.95
+
+    legacy = {"version": 2, "backends": {
+        b: {k: v for k, v in e.items() if k != "overlap"}
+        for b, e in doc["backends"].items()}}
+    p = tmp_path / "legacy_no_overlap.json"
+    p.write_text(json.dumps(legacy))
+    try:
+        loaded = CM.load_wire_calibration(str(p))
+        assert loaded is not None and "overlap" not in loaded
+        assert CM.wire_factor("manual", "int8_ef_rs") == pytest.approx(
+            entry["wire_factors"]["manual"]["int8_ef_rs"])
+    finally:
+        CM.reset_wire_calibration()

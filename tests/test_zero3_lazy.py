@@ -99,19 +99,35 @@ def test_zero3_hlo_s8_scatter_and_no_full_tree_gather():
 
 @needs_multi_device
 def test_zero3_n_buffer_controls_fwd_to_bwd_weight_buffering():
-    """n_buffer is meaningful on the manual path now: a fully-buffered zero3
-    plan saves gathered weights FWD->BWD (stacked-full arrays appear in the
-    HLO — the scan stacks each chunk's saved weights), an unbuffered one
-    re-gathers in BWD (no stacked-full arrays anywhere)."""
+    """n_buffer is meaningful on the manual path: a fully-buffered zero3
+    plan saves gathered weights FWD->BWD, an unbuffered one re-gathers in
+    BWD (no stacked-full arrays anywhere). Since the prefetch pipeline
+    (models/model._apply_run_prefetched) the buffered run carries gathered
+    weights through the scan — chunk k+1's gather is issued during chunk
+    k's compute — so the saves appear stacked at ``n_repeats - 1`` leading
+    (the scanned iterations; the pre-gathered first and trailing last
+    repeat are saved unstacked). A 4-block model keeps the scan rolled
+    (length 3), which is what makes the stacking visible in HLO."""
     mesh = dp_mesh()
-    art_buf = build_train_step(
-        TINY, zero_plan(n_buffer=4, zero_stage=3), mesh, SHAPE)
+    cfg4 = dataclasses.replace(TINY, num_layers=4)
+
+    def plan4(**kw):
+        kw.setdefault("grad_compress", "int8_ef")
+        kw.setdefault("sync_mode", "manual")
+        return MemoryPlan(n_chunks=6, n_blocks=4, **kw)
+
+    art_buf = build_train_step(cfg4, plan4(n_buffer=6, zero_stage=3), mesh, SHAPE)
     hlo_buf = art_buf.lower(donate=False).compile().as_text()
-    shapes = _stacked_full_shapes(art_buf, mesh)
-    assert any(s in hlo_buf for s in shapes), (
-        "buffered zero3 should keep gathered weights live FWD->BWD")
-    # the unbuffered program is the one test_zero3_hlo_... compiles; its
-    # assertion (no stacked-full shapes) is the other half of this semantic
+    full = _stacked_full_shapes(art_buf, mesh)  # leading dim == n_repeats
+    carried = {s.split("[")[0] + "[3," + s.split(",", 1)[1] for s in full}
+    assert any(s in hlo_buf for s in carried), (
+        "buffered zero3 should keep gathered weights live FWD->BWD "
+        "(scan-carried stacks from the prefetch pipeline)")
+
+    art_un = build_train_step(cfg4, plan4(zero_stage=3), mesh, SHAPE)
+    hlo_un = art_un.lower(donate=False).compile().as_text()
+    assert not any(s in hlo_un for s in full | carried), (
+        "unbuffered zero3 must re-gather in BWD, never stack saved weights")
 
 
 @needs_multi_device
