@@ -197,6 +197,114 @@ def calibrate_serve(arch: str = "llama3-405b", *, seq_len: int = 64,
     }
 
 
+def _pallas_block_census(fn, *args) -> dict:
+    """Grid + per-input block-byte census of the single pallas_call inside
+    ``fn``, from its traced jaxpr. Structural truth for the kernel fits: the
+    block specs *are* what the kernel streams per grid step, so
+    grid_steps x block_bytes is the kernel's HBM read inventory."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    eqns: list = []
+
+    def walk(jx):
+        for eq in jx.eqns:
+            if eq.primitive.name == "pallas_call":
+                eqns.append(eq)
+            for v in eq.params.values():
+                inner = getattr(v, "jaxpr", None)
+                if hasattr(inner, "eqns"):
+                    walk(inner)
+                elif hasattr(v, "eqns"):
+                    walk(v)
+
+    walk(jaxpr.jaxpr)
+    (eq,) = eqns
+    gm = eq.params["grid_mapping"]
+    steps = 1
+    for d in gm.grid:
+        steps *= int(d)
+    inputs = []
+    for bm, invar in zip(gm.block_mappings, eq.invars):
+        shape = tuple(int(d) for d in bm.block_shape
+                      if isinstance(d, (int,)) or getattr(d, "__int__", None))
+        n = 1
+        for d in shape:
+            n *= int(d)
+        inputs.append({
+            "block_shape": tuple(int(d) for d in shape),
+            "bytes_per_step": n * jnp.dtype(invar.aval.dtype).itemsize,
+        })
+    return {"grid_steps": steps, "inputs": inputs}
+
+
+def calibrate_kernels(*, b: int = 2, hq: int = 8, hkv: int = 2,
+                      s_kv: int = 64, page_size: int = 8, n_hot: int = 2,
+                      hd: int = 32, z: int = 4, n: int = 4096) -> dict:
+    """Fit the ``paged_attn`` and ``fused_quant`` pass factors from the
+    traced pallas_call block census of the jitted kernel wrappers.
+
+    * ``paged_attn``: measured = grid_steps x the four K/V stream blocks
+      (hot-k, cold-k, hot-v, cold-v tiles — identified by their
+      (1, page_size, hd) block shape; the q block is (1, group, hd), kept
+      distinct). Modeled at factor 1: KERNEL_CACHE_PASSES passes over the
+      (k, v) cache bytes — exactly what
+      cost_model.paged_cache_read_bytes charges the kernel branch.
+    * ``fused_quant``: measured = grid_steps x the fp32 chunk block.
+      Modeled at factor 1: one fp32 read pass over the (z, n) working set —
+      what t_reduce's fused-quantize pricing charges at 1 pass.
+
+    A healthy build fits 1.0 on both; drift means the kernel's block specs
+    grew extra streams (a transient rematerialized, a block revisited) and
+    the cost model's pass counts no longer describe the kernel. Falls back
+    to the analytic factors (1.0, recorded with the error) if the jaxpr
+    introspection API moved."""
+    from repro.kernels.fused_quant import fused_quantize_ef
+    from repro.kernels.paged_attention import paged_attention
+
+    assert hq // hkv != page_size, "q/kv block shapes must stay distinguishable"
+    w = n_hot * page_size
+    f32 = jnp.float32
+    pa_args = (jnp.zeros((b, 1, hq, hd), f32),
+               jnp.zeros((b, w, hkv, hd), f32),
+               jnp.zeros((b, w, hkv, hd), f32),
+               jnp.zeros((b, s_kv, hkv, hd), f32),
+               jnp.zeros((b, s_kv, hkv, hd), f32),
+               jnp.zeros((b, s_kv), bool),
+               jnp.zeros((b, s_kv), f32))
+    fq_args = (jnp.zeros((z, n), f32), jnp.int32(0))
+    try:
+        pa = _pallas_block_census(
+            lambda *a: paged_attention(*a, n_hot=n_hot, interpret=True), *pa_args)
+        fq = _pallas_block_census(
+            lambda c, m: fused_quantize_ef(c, m, interpret=True), *fq_args)
+    except Exception as e:  # pragma: no cover - jaxpr API drift
+        return {"paged_attn": 1.0, "fused_quant": 1.0,
+                "fit": {"error": f"pallas_call introspection failed: {e}"}}
+    from repro.core.cost_model import KERNEL_CACHE_PASSES
+
+    kv_stream = [r for r in pa["inputs"]
+                 if r["block_shape"] == (1, page_size, hd)
+                 and r["bytes_per_step"] == page_size * hd * 4]
+    pa_measured = pa["grid_steps"] * sum(r["bytes_per_step"] for r in kv_stream)
+    pa_modeled = KERNEL_CACHE_PASSES * 2 * b * s_kv * hkv * hd * 4
+    ch_stream = [r for r in fq["inputs"] if r["block_shape"] == (1, n)
+                 and r["bytes_per_step"] == n * 4]
+    fq_measured = fq["grid_steps"] * sum(r["bytes_per_step"] for r in ch_stream)
+    fq_modeled = z * n * 4
+    return {
+        "paged_attn": round(pa_measured / max(pa_modeled, 1), 4),
+        "fused_quant": round(fq_measured / max(fq_modeled, 1), 4),
+        "fit": {
+            "paged_attn": {"grid_steps": pa["grid_steps"],
+                           "kv_stream_blocks": len(kv_stream),
+                           "measured_bytes": pa_measured,
+                           "modeled_factor1_bytes": pa_modeled},
+            "fused_quant": {"grid_steps": fq["grid_steps"],
+                            "measured_bytes": fq_measured,
+                            "modeled_factor1_bytes": fq_modeled},
+        },
+    }
+
+
 def dataclasses_asdict_safe(obj) -> dict:
     import dataclasses as _dc
 
@@ -331,6 +439,11 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
     serve = calibrate_serve(steps_model)
     factors["serve"] = {"h2d_page": serve["h2d_page"]}
 
+    # fused-kernel pass factors (ISSUE-8; traced block census, no compile)
+    kernels = calibrate_kernels()
+    factors["serve"]["paged_attn"] = kernels["paged_attn"]
+    factors["manual"]["fused_quant"] = kernels["fused_quant"]
+
     entry = {
         "wire_factors": factors,
         "overlap": modeled_overlap(steps_model, mesh),
@@ -340,6 +453,7 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
             "grad_bytes": grad_bytes,
             "measured": measured,
             "serve": serve["fit"],
+            "kernels": kernels["fit"],
         },
     }
     if ef_factor is not None:
@@ -391,6 +505,22 @@ def main() -> int:
                   "pages are being fetched more than once per layer "
                   "(duplication) or the per-page pipeline collapsed into a "
                   "full-cache gather (hoist regression)")
+            return 1
+        pa = entry["wire_factors"]["serve"].get("paged_attn")
+        fq = entry["wire_factors"]["manual"].get("fused_quant")
+        print(f"[calibrate_wire --dry-run] paged_attn={pa} fused_quant={fq}")
+        if pa is None or not (0.5 <= pa <= 2.0):
+            print("[calibrate_wire --dry-run] FAIL: paged-attention kernel "
+                  f"pass factor {pa} outside the sane band [0.5, 2.0] — the "
+                  "kernel's block specs no longer stream the cost model's "
+                  "KERNEL_CACHE_PASSES passes over the cache (an extra "
+                  "stream or revisit crept into the block census)")
+            return 1
+        if fq is None or not (0.5 <= fq <= 2.0):
+            print("[calibrate_wire --dry-run] FAIL: fused-quantize pass "
+                  f"factor {fq} outside the sane band [0.5, 2.0] — the "
+                  "kernel no longer reads the chunk working set exactly "
+                  "once per grid step")
             return 1
         hf = entry.get("overlap", {}).get("hidden_comm_fraction")
         print(f"[calibrate_wire --dry-run] hidden_comm_fraction={hf}")

@@ -119,7 +119,49 @@ def decode_memory_fidelity(arch: str = "llama3-405b") -> list[dict]:
             "xla_gb": round(measured / 1e9, 4),
             "ratio": round(predicted / max(measured, 1), 3),
         })
+    if full.n_pages > 1:
+        rows.append(decode_paged_kernel_fidelity(cfg, shape))
     return rows
+
+
+def decode_paged_kernel_fidelity(cfg, shape: ShapeConfig) -> dict:
+    """ISSUE-8 row: the *kernel-path* paged decode step (plain jit over
+    KV.decode_step with a kernel-on PagedKV hook — the step-builder path
+    host-shards the fetch and stays lax, so the Pallas route is only
+    compilable standalone). Predicted: weights + the paged cache partitions
+    (hot rings, cold store, one layer's gather working set — the interpret-
+    mode pallas_call still materializes its operands as temps on CPU)."""
+    from repro.core.chunks import chunk_inventory
+    from repro.models import kvcache as KV
+    from repro.models import model as M
+    from repro.serve.paging import (
+        PagedKV,
+        cache_partition_bytes,
+        choose_paging,
+        init_paged_cache,
+    )
+
+    B, S = shape.global_batch, shape.seq_len
+    spec = choose_paging(KV.cache_len(cfg, S), 8, 2)
+    io = PagedKV(spec, use_kernel=True)
+    assert io.use_kernel, "kernel row requires the Pallas dispatch"
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_paged_cache(cfg, B, S, spec)
+    toks = np.zeros((B, 1), np.int32)
+    pos = np.zeros((B,), np.int32)  # traced — static ints collapse residency
+    fn = jax.jit(lambda p, c, t, ps: KV.decode_step(p, c, t, ps, cfg, kv_io=io))
+    m = fn.lower(params, cache, toks, pos).compile().memory_analysis()
+    measured = (m.temp_size_in_bytes + m.argument_size_in_bytes
+                + m.host_argument_size_in_bytes + m.host_temp_size_in_bytes)
+    parts = cache_partition_bytes(cfg, B, S, spec)
+    weights = sum(c.param_bytes for c in chunk_inventory(cfg))
+    predicted = weights + parts["hbm"] + parts["host"] + parts["transient"]
+    return {
+        "plan": "decode_paged_kernel",
+        "predicted_gb": round(predicted / 1e9, 4),
+        "xla_gb": round(measured / 1e9, 4),
+        "ratio": round(predicted / max(measured, 1), 3),
+    }
 
 
 def memory_fidelity(arch: str = "llama3-405b") -> list[dict]:
@@ -159,6 +201,21 @@ def memory_fidelity(arch: str = "llama3-405b") -> list[dict]:
     w_dp = build_workload(cfg, shape, _local_mesh_spec(dp_mesh), CPU_HW)
     rows += [row(name, plan, w_dp, dp_mesh)
              for name, plan in manual_plans_under_test(w_dp.n_chunks, w_dp.n_blocks)]
+
+    # ISSUE-8 row: same zero3 program with the fused int8 quantize+pack
+    # kernel pinned on — the Pallas dispatch must not change what is
+    # resident (it replaces three elementwise ops, not any buffer), so this
+    # row shares manual_zero3's estimate and gate
+    from repro.dist.collectives import set_fused_quant
+
+    try:
+        set_fused_quant(True)
+        rows.append(row(
+            "manual_zero3_fusedq",
+            MemoryPlan(w_dp.n_chunks, w_dp.n_blocks, grad_compress="int8_ef",
+                       sync_mode="manual", zero_stage=3), w_dp, dp_mesh))
+    finally:
+        set_fused_quant(None)
     return rows
 
 

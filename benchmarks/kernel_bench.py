@@ -1,0 +1,159 @@
+"""Kernel bench: the fused Pallas kernels against their lax baselines.
+
+Emits one row per kernel with *modeled* HBM byte counts on both sides and
+*measured* wall times (informational on this CPU container — interpret mode
+executes the kernel body op-by-op through the Pallas interpreter, so its
+wall clock measures the interpreter, not the kernel; on a real accelerator
+the measured column becomes the contract). The CI gate is the modeled
+contrast: the kernel's byte inventory — taken from the traced pallas_call
+block census, i.e. what the kernel *actually* streams per grid step — must
+be strictly below the lax pipeline's pass count at the cost model's
+pricing, or the perf claim the planner acts on
+(cost_model.KERNEL_CACHE_PASSES < LAX_REBUILD_CACHE_PASSES, 1 fused
+quantize pass < 3 unfused) has rotted.
+
+Rows:
+  * paged_attention — fused decode attention over the paged cache layout
+    (kernels/paged_attention.py) vs the lax gather-then-attend rebuild
+    (serve/paging.PagedKV.update_and_fetch + _masked_decode_attn): 2 cache
+    passes vs 3.
+  * fused_quant — one-pass int8 absmax quantize+pack+EF-residual
+    (kernels/fused_quant.py) vs the three-op sequence in
+    dist/collectives.manual_int8_ef_reduce_scatter.
+
+Usage:
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--out BENCH_kernels.json]
+"""
+from __future__ import annotations
+
+import os
+
+if "XLA_FLAGS" not in os.environ:  # must precede jax import; mirror CI
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import argparse
+import functools
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(__file__))
+from calibrate_wire import _pallas_block_census  # noqa: E402
+
+from repro.core.cost_model import (  # noqa: E402
+    KERNEL_CACHE_PASSES,
+    LAX_REBUILD_CACHE_PASSES,
+)
+from repro.kernels import ref as R  # noqa: E402
+from repro.kernels.fused_quant import fused_quantize_ef  # noqa: E402
+from repro.kernels.paged_attention import paged_attention  # noqa: E402
+
+
+def _time_ms(fn, *args, iters: int = 10) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def bench_paged_attention(*, b: int = 4, hq: int = 8, hkv: int = 2,
+                          s_kv: int = 256, page_size: int = 16,
+                          n_hot: int = 2, hd: int = 64) -> dict:
+    w = n_hot * page_size
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 7)
+    f32 = jnp.float32
+    args = (jax.random.normal(ks[0], (b, 1, hq, hd), f32),
+            jax.random.normal(ks[1], (b, w, hkv, hd), f32),
+            jax.random.normal(ks[2], (b, w, hkv, hd), f32),
+            jax.random.normal(ks[3], (b, s_kv, hkv, hd), f32),
+            jax.random.normal(ks[4], (b, s_kv, hkv, hd), f32),
+            jax.random.bernoulli(ks[5], 0.5, (b, s_kv)),
+            jnp.where(jax.random.bernoulli(ks[6], 0.9, (b, s_kv)),
+                      0.0, -1e30).astype(f32))
+    kern = functools.partial(paged_attention, n_hot=n_hot, interpret=True)
+    lax_ref = jax.jit(R.paged_attention_ref)
+    kv_bytes = 2 * b * s_kv * hkv * hd * 4  # k + v cache working set, fp32
+    census = _pallas_block_census(lambda *a: kern(*a), *args)
+    kv_stream = [r for r in census["inputs"]
+                 if r["block_shape"] == (1, page_size, hd)]
+    modeled_kernel = census["grid_steps"] * sum(
+        r["bytes_per_step"] for r in kv_stream)
+    assert modeled_kernel == KERNEL_CACHE_PASSES * kv_bytes, (
+        "block census no longer matches the cost model's kernel pass count")
+    return {
+        "kernel": "paged_attention",
+        "shape": {"b": b, "hq": hq, "hkv": hkv, "s_kv": s_kv,
+                  "page_size": page_size, "n_hot": n_hot, "hd": hd},
+        "modeled_kernel_bytes": int(modeled_kernel),
+        "modeled_lax_bytes": int(LAX_REBUILD_CACHE_PASSES * kv_bytes),
+        "speedup_modeled": round(
+            LAX_REBUILD_CACHE_PASSES * kv_bytes / modeled_kernel, 4),
+        "measured_kernel_ms": round(_time_ms(kern, *args), 3),
+        "measured_lax_ms": round(_time_ms(lax_ref, *args), 3),
+        "measured_is_interpret_mode": True,
+    }
+
+
+def bench_fused_quant(*, z: int = 4, n: int = 1 << 18) -> dict:
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    ch = (jax.random.normal(ks[0], (z, n), jnp.float32)
+          * jnp.exp(jax.random.normal(ks[1], (z, 1))))
+    kern = functools.partial(fused_quantize_ef, interpret=True)
+    lax_ref = jax.jit(R.fused_quantize_ef_ref)
+    work = z * n * 4  # fp32 chunk working set
+    census = _pallas_block_census(lambda c, m: kern(c, m), ch, jnp.int32(0))
+    ch_stream = [r for r in census["inputs"] if r["block_shape"] == (1, n)]
+    modeled_kernel = census["grid_steps"] * sum(
+        r["bytes_per_step"] for r in ch_stream)
+    assert modeled_kernel == work, (
+        "fused-quant census no longer reads the chunk exactly once")
+    return {
+        "kernel": "fused_quant",
+        "shape": {"z": z, "n": n},
+        "modeled_kernel_bytes": int(modeled_kernel),
+        "modeled_lax_bytes": int(3 * work),  # absmax + quantize + residual
+        "speedup_modeled": round(3 * work / modeled_kernel, 4),
+        "measured_kernel_ms": round(_time_ms(kern, ch, jnp.int32(0)), 3),
+        "measured_lax_ms": round(_time_ms(lax_ref, ch, jnp.int32(0)), 3),
+        "measured_is_interpret_mode": True,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+
+    rows = [bench_paged_attention(), bench_fused_quant()]
+    doc = {"generated_by": "benchmarks/kernel_bench.py",
+           "backend": jax.default_backend(), "kernels": rows}
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+    ok = True
+    for r in rows:
+        faster = r["modeled_kernel_bytes"] < r["modeled_lax_bytes"]
+        ok &= faster
+        print(f"[kernel_bench] {r['kernel']}: modeled {r['modeled_kernel_bytes']}"
+              f" vs lax {r['modeled_lax_bytes']} bytes "
+              f"(x{r['speedup_modeled']}), measured {r['measured_kernel_ms']}ms"
+              f" vs {r['measured_lax_ms']}ms (interpret) "
+              f"{'OK' if faster else 'FAIL'}")
+    print(f"[kernel_bench] wrote {args.out}")
+    if not ok:
+        print("[kernel_bench] FAIL: a kernel is not strictly cheaper than its"
+              " lax baseline in modeled bytes — the planner's kernel-aware"
+              " pricing (cost_model) is now claiming a speedup that the block"
+              " census does not support")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -67,15 +67,22 @@ GRAD_WIRE_FACTOR = {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5}
 # (z-1)/z-per-chunk topology bytes.
 DEFAULT_WIRE_FACTORS = {
     "xla": {"none": 1.0, "bf16": 1.0, "int8_ef": 1.0},
+    # "fused_quant" scales the *HBM pass* count of the fused int8
+    # quantize+pack kernel (kernels/fused_quant.py) against the analytic
+    # one-pass model — calibrated from the pallas_call block-spec bytes of
+    # the jitted kernel (benchmarks/calibrate_wire.py's kernel configs).
     "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5, "int8_ef_rs": 0.5,
-               "gather_bf16": 1.0},
+               "gather_bf16": 1.0, "fused_quant": 1.0},
     # Serving pipelines (repro.serve). "h2d_page" scales the cold-page
     # fetch bytes of the paged decode step against the modeled
     # pages x page_bytes x attention-layers product — calibrated from the
     # page-fetch slices of the compiled paged program
-    # (benchmarks/calibrate_wire.py's h2d_page config). Per-key defaulting
-    # (schema v2) keeps pre-serving calibration files loading cleanly.
-    "serve": {"h2d_page": 1.0},
+    # (benchmarks/calibrate_wire.py's h2d_page config). "paged_attn" scales
+    # the fused decode-attention kernel's per-layer cache stream (hot ring +
+    # cold tiles, KERNEL_CACHE_PASSES analytic passes) the same way. Per-key
+    # defaulting (schema v2) keeps pre-serving calibration files loading
+    # cleanly.
+    "serve": {"h2d_page": 1.0, "paged_attn": 1.0},
 }
 
 # fp32 error-feedback residual per param = 2x the bf16 grad bytes; the
@@ -276,15 +283,37 @@ class Workload:
             if sharded:
                 factor = wire_factor("manual", "int8_ef_rs")
                 nbytes = chunk.grad_bytes * factor / self.mesh.tp_degree
-                return nbytes * (z - 1) / z / bw
+                return (nbytes * (z - 1) / z / bw
+                        + self._t_quantize_pass(chunk, fused_aware=True))
             factor = wire_factor("manual", "int8_ef")
             nbytes = chunk.grad_bytes * factor / self.mesh.tp_degree
-            return nbytes * (z - 1) / bw
+            return (nbytes * (z - 1) / bw
+                    + self._t_quantize_pass(chunk, fused_aware=False))
         factor = wire_factor(plan.sync_mode, plan.grad_compress)
         nbytes = chunk.grad_bytes * factor / self.mesh.tp_degree
         if not sharded:
             return 2.0 * nbytes * (z - 1) / z / bw
         return nbytes * (z - 1) / z / bw
+
+    def _t_quantize_pass(self, chunk: ChunkInfo, *, fused_aware: bool) -> float:
+        """HBM time of the int8 quantize+pack stage feeding the compressed
+        reduce. The fp32 chunk working set (2x the bf16 grad bytes) is
+        crossed once by the fused Pallas kernel (kernels/fused_quant.py:
+        absmax + quantize + EF residual in one pass) vs three times by the
+        unfused absmax/round/residual sequence, scaled by the calibrated
+        "fused_quant" factor. Only the reduce-scatter pipeline dispatches to
+        the fused kernel (dist/collectives.manual_int8_ef_reduce_scatter);
+        the persistent gather variant stays unfused (``fused_aware=False``).
+        """
+        if fused_aware:
+            from repro.dist.collectives import fused_quant_enabled
+
+            passes = 1.0 if fused_quant_enabled() else 3.0
+        else:
+            passes = 3.0
+        passes *= wire_factor("manual", "fused_quant")
+        work = chunk.grad_bytes * 2.0 / self.mesh.tp_degree
+        return self.hw.hbm_time(passes * work)
 
     def t_grad_offload(self, chunk: ChunkInfo, host_bw_eff: float) -> float:
         shard = chunk.grad_bytes / (self.mesh.tp_degree * self.mesh.zero_degree)
@@ -434,16 +463,72 @@ def t_page_fetch(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     return nbytes * wire_factor("serve", "h2d_page") / hw.host_bw
 
 
+# HBM passes over each attention layer's cache working set in one paged
+# decode step. The lax rebuild (serve/paging.PagedKV.update_and_fetch +
+# _masked_decode_attn) reads the hot/cold sources, writes the gathered
+# transient reconstruction, then re-reads it for attention: 3 passes. The
+# fused Pallas kernel (kernels/paged_attention.py) streams hot-ring slices
+# and cold-page tiles straight into the attention blocks — read K, read V,
+# no transient materialization: 2 passes, scaled by the calibrated
+# wire_factor("serve", "paged_attn").
+LAX_REBUILD_CACHE_PASSES = 3.0
+KERNEL_CACHE_PASSES = 2.0
+
+
+def decode_kernel_active() -> bool:
+    """Does the decode step route through the fused paged-attention kernel?
+
+    Mirrors serve/paging.PagedKV's auto-resolution (kernel path engages
+    when the kernels package dispatches to Pallas); host-sharded fetch
+    plans keep the lax pipeline and price with ``kernel=False``."""
+    try:
+        from repro.kernels import pallas_kernels_active
+    except Exception:  # pragma: no cover - kernels package import failure
+        return False
+    return pallas_kernels_active()
+
+
+def paged_cache_read_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                           mesh: MeshSpec, spec,
+                           kernel: bool | None = None) -> float:
+    """Per-device HBM bytes one paged decode step reads from the KV cache:
+    the resident hot rings plus each attention layer's per-step cache
+    stream at the kernel-aware pass count (see LAX_REBUILD_CACHE_PASSES /
+    KERNEL_CACHE_PASSES)."""
+    from repro.core.serve_plan import _paged_parts_per_device
+
+    if kernel is None:
+        kernel = decode_kernel_active()
+    parts = _paged_parts_per_device(cfg, shape, mesh, spec)
+    if kernel:
+        passes = KERNEL_CACHE_PASSES * wire_factor("serve", "paged_attn")
+    else:
+        passes = LAX_REBUILD_CACHE_PASSES
+    return parts["hbm"] + passes * parts["transient"] * _attn_layer_count(cfg)
+
+
 def t_decode_compute(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
-                     hw: HardwareSpec) -> float:
+                     hw: HardwareSpec, spec=None,
+                     kernel: bool | None = None) -> float:
     """One decode step's compute window per device: the active-parameter
-    matmuls against the weight + cache read bandwidth floor."""
+    matmuls against the weight + cache read bandwidth floor.
+
+    With a paging ``spec`` the cache term is priced kernel-aware
+    (``paged_cache_read_bytes``): the fused paged-attention kernel streams
+    2 passes over each layer's cache working set where the lax rebuild
+    takes 3, so the modeled decode window shrinks when the kernel is
+    active. ``kernel=None`` auto-resolves via ``decode_kernel_active()``;
+    without a spec the resident-cache pricing is unchanged."""
     b_loc = shape.global_batch / mesh.zero_degree
     flops = 2.0 * cfg.active_param_count() * b_loc / mesh.tp_degree
     weights_dev = sum(c.param_bytes for c in chunk_inventory(cfg)) / mesh.tp_degree
     from repro.core.serve_plan import cache_bytes_per_device
 
-    read = weights_dev + cache_bytes_per_device(cfg, shape, mesh)
+    if spec is None:
+        read = weights_dev + cache_bytes_per_device(cfg, shape, mesh)
+    else:
+        read = weights_dev + paged_cache_read_bytes(cfg, shape, mesh, spec,
+                                                    kernel=kernel)
     return max(hw.matmul_time(flops), hw.hbm_time(read))
 
 
@@ -463,7 +548,7 @@ def t_prefill_chunk(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     cold-page fetch, whichever dominates on a paged plan — times the chunk
     length. Priced next to ``t_page_fetch`` so the planner reasons about
     admission latency and fetch drain with one vocabulary."""
-    per_tok = t_decode_compute(cfg, shape, mesh, hw)
+    per_tok = t_decode_compute(cfg, shape, mesh, hw, spec=spec)
     if spec is not None:
         per_tok = max(per_tok, t_page_fetch(cfg, shape, mesh, hw, spec))
     return chunk * per_tok
@@ -477,10 +562,11 @@ def choose_prefill_chunk(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     [1, max_chunk]. Bigger chunks amortize per-call dispatch but each call
     stalls in-flight decode streams for ``t_prefill_chunk``; the budget caps
     that stall at a bounded number of inter-token latencies."""
-    per_tok = t_decode_compute(cfg, shape, mesh, hw)
+    per_tok = t_decode_compute(cfg, shape, mesh, hw, spec=spec)
     if spec is not None:
         per_tok = max(per_tok, t_page_fetch(cfg, shape, mesh, hw, spec))
-    budget = PREFILL_STALL_BUDGET_STEPS * t_decode_compute(cfg, shape, mesh, hw)
+    budget = PREFILL_STALL_BUDGET_STEPS * t_decode_compute(cfg, shape, mesh, hw,
+                                                           spec=spec)
     chunk = max(1, int(budget / per_tok)) if per_tok > 0 else (max_chunk or 1)
     if max_chunk is not None:
         chunk = min(chunk, max_chunk)
@@ -498,7 +584,7 @@ def page_fetch_feasible(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     host-link speed — so the planner prefers feasible hot windows but may
     fall back (serve_plan)."""
     return t_page_fetch(cfg, shape, mesh, hw, spec) <= t_decode_compute(
-        cfg, shape, mesh, hw)
+        cfg, shape, mesh, hw, spec=spec)
 
 
 def serve_totals(w: Workload, plan: MemoryPlan) -> tuple[float, float]:
@@ -513,21 +599,16 @@ def serve_totals(w: Workload, plan: MemoryPlan) -> tuple[float, float]:
     weights_dev = sum(c.param_bytes for c in w.chunks) / mesh.tp_degree
     if plan.n_persist < plan.n_chunks:
         weights_dev = weights_dev  # gathered through HBM once either way
-    from repro.core.serve_plan import (
-        _paged_parts_per_device,
-        cache_bytes_per_device,
-        paging_from_plan,
-    )
+    from repro.core.serve_plan import cache_bytes_per_device, paging_from_plan
 
     spec = paging_from_plan(w.cfg, w.shape, plan)
     if spec is None:
         cache_dev = cache_bytes_per_device(w.cfg, w.shape, mesh)
     else:
-        # paged decode: HBM sees the hot rings plus each layer's gathered
-        # reconstruction streaming through (the cold pages ride the host link,
-        # priced separately by t_page_fetch)
-        parts = _paged_parts_per_device(w.cfg, w.shape, mesh, spec)
-        cache_dev = parts["hbm"] + parts["transient"] * _attn_layer_count(w.cfg)
+        # paged decode: HBM sees the hot rings plus each layer's per-step
+        # cache stream at the kernel-aware pass count (the cold pages ride
+        # the host link, priced separately by t_page_fetch)
+        cache_dev = paged_cache_read_bytes(w.cfg, w.shape, mesh, spec)
     return flops, weights_dev + cache_dev
 
 

@@ -207,6 +207,28 @@ def _chunk(x: jax.Array, dim: int, z: int) -> jax.Array:
     return jnp.moveaxis(parts, dim, 0)
 
 
+# Fused quantize/pack dispatch for the reduce-scatter wire path. Tri-state:
+# None (default) auto-resolves to the Pallas kernel when the kernels package
+# dispatches to Pallas; True/False force the path (differential tests drive
+# both sides, and the fidelity/bench harnesses pin it for labeled rows).
+_FUSED_QUANT: bool | None = None
+
+
+def set_fused_quant(enabled: bool | None) -> None:
+    """Force (True/False) or restore auto-resolution (None) of the fused
+    int8 quantize+pack kernel in ``manual_int8_ef_reduce_scatter``."""
+    global _FUSED_QUANT
+    _FUSED_QUANT = enabled
+
+
+def fused_quant_enabled() -> bool:
+    if _FUSED_QUANT is not None:
+        return _FUSED_QUANT
+    from repro.kernels import pallas_kernels_active
+
+    return pallas_kernels_active()
+
+
 def manual_reduce_scatter(x: jax.Array, axis_names, dim: int,
                           wire_dtype=None) -> jax.Array:
     """Mean-reduce-scatter over the sync axes: returns this device's shard of
@@ -251,13 +273,22 @@ def manual_int8_ef_reduce_scatter(
     me = _flat_axis_index(axis_names)
     ch = _chunk(x.astype(jnp.float32), dim, z)  # (z, *shard_shape)
     ch = ch.at[me].add(err.astype(jnp.float32))
-    scale = jnp.maximum(
-        jnp.max(jnp.abs(ch), axis=tuple(range(1, ch.ndim))), 1e-30) / 127.0
-    q = jnp.clip(
-        jnp.round(ch / scale.reshape((z,) + (1,) * (ch.ndim - 1))), -127, 127
-    ).astype(jnp.int8)
-    own_c = ch[me]
-    new_err = own_c - q[me].astype(jnp.float32) * scale[me]
+    if fused_quant_enabled():
+        # One fused pass: absmax + quantize + pack + own-chunk EF residual
+        # (kernels/fused_quant.py). Bit-identical to the three-op sequence
+        # below when each path is jit'd separately; the unfused sequence
+        # stays as the differential-testing / pallas-less fallback.
+        from repro.kernels import fused_quantize_ef
+
+        q, scale, new_err = fused_quantize_ef(ch, me)
+    else:
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(ch), axis=tuple(range(1, ch.ndim))), 1e-30) / 127.0
+        q = jnp.clip(
+            jnp.round(ch / scale.reshape((z,) + (1,) * (ch.ndim - 1))), -127, 127
+        ).astype(jnp.int8)
+        own_c = ch[me]
+        new_err = own_c - q[me].astype(jnp.float32) * scale[me]
     qr = jax.lax.all_to_all(q, _names(axis_names), 0, 0)  # int8 on the wire
     sr = jax.lax.all_to_all(scale, _names(axis_names), 0, 0)  # (z,) fp32 scales
     deq = qr.astype(jnp.float32) * sr.reshape((z,) + (1,) * (qr.ndim - 1))

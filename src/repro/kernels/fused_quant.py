@@ -1,0 +1,91 @@
+"""Fused int8 absmax quantize + pack + error-feedback update (Pallas).
+
+The manual-sync wire path (dist/collectives.manual_int8_ef_reduce_scatter)
+used to run three separate passes over the fp32 chunk view before the
+all_to_all: an abs/max reduction for the per-chunk scale, a divide/round/clip
+pass producing the s8 payload, and a dequant-subtract pass for the new EF
+residual of the owned chunk. This kernel fuses them: one streamed pass per
+chunk emits the s8 payload, its fp32 scale, and — on the grid step whose
+chunk this device owns — the updated residual.
+
+Grid is ``(z,)`` (one step per sync peer's chunk, ``arbitrary`` ordering);
+each step holds one flattened (1, N) chunk block in VMEM. The owner index
+``me`` rides in SMEM so the residual write can be predicated per step —
+under ``shard_map`` it is ``lax.axis_index``, a traced per-device scalar.
+
+Exactness: every op is the same elementwise/ exact-reduction op the three-op
+sequence ran — ``max(|x|)`` is order-independent, divide/round(half-even)/
+clip are elementwise — so payload, scales, and residual are bit-identical to
+the unfused path (tests/test_paged_attention_kernel.py property-tests this
+under hypothesis). The collective itself (all_to_all of s8 + scales) stays
+outside: Pallas kernels cannot contain collectives.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# CompilerParams was renamed across jax releases (same fields)
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def _kernel(me_ref, ch_ref, q_ref, scale_ref, err_ref):
+    i = pl.program_id(0)
+    ch = ch_ref[0]
+    # same op sequence as the three-op path: absmax (exact reduction),
+    # clamp, /127, round half-even, clip, s8 cast, dequant-subtract
+    scale = jnp.maximum(jnp.max(jnp.abs(ch)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(ch / scale), -127, 127).astype(jnp.int8)
+    q_ref[0] = q
+    scale_ref[0, 0] = scale
+
+    @pl.when(i == me_ref[0])
+    def _own_residual():
+        err_ref[0] = ch - q.astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_quantize_ef(
+    ch: jax.Array,  # (z, *shard) fp32 chunked tensor, EF already added at [me]
+    me: jax.Array,  # () int32 — this device's chunk index (lax.axis_index)
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-pass absmax int8 quantize of ``z`` chunks.
+
+    Returns ``(q, scales, new_err)``: s8 payload shaped like ``ch``, (z,)
+    fp32 per-chunk scales, and the owned chunk's fp32 EF residual shaped
+    like ``ch[0]`` — bit-identical to the three-op sequence.
+    """
+    z = ch.shape[0]
+    shard_shape = ch.shape[1:]
+    n = 1
+    for d in shard_shape:
+        n *= d
+    flat = ch.astype(jnp.float32).reshape(z, n)
+    q, scale, err = pl.pallas_call(
+        _kernel,
+        grid=(z,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((z, n), jnp.int8),
+            jax.ShapeDtypeStruct((z, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(jnp.asarray(me, jnp.int32).reshape(1), flat)
+    return (q.reshape(ch.shape), scale[:, 0],
+            err[0].reshape(shard_shape))

@@ -4,27 +4,61 @@ On TPU the kernels run compiled; everywhere else (this CPU container) they
 run in interpret mode, which executes the kernel body op-by-op — bit-for-bit
 the same math, so tests validate the kernel logic against the ref.py oracles
 without TPU hardware.
+
+The interpret decision is resolved once per process (``interpret_mode``):
+it depends only on the backend, which jax fixes at first use, so consulting
+``compat.pallas_interpret_required`` on every kernel call was pure overhead.
+``assert_ref_agreement`` is the one shared kernel-vs-oracle structure
+checker (dtype + shape over arbitrary output pytrees) used by the kernel
+tests and ``benchmarks/kernel_bench.py`` — per-op copies of the same
+asserts are gone.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.compat import pallas_interpret_required
-from repro.kernels import fused_adam as _fa
 from repro.kernels import flash_attention as _flash
+from repro.kernels import fused_adam as _fa
+from repro.kernels import fused_quant as _fq
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rmsnorm as _rn
 
+_INTERPRET: bool | None = None
 
-def _interpret() -> bool:
-    # capability probe lives in repro.compat; interpret mode covers every
-    # backend without a Pallas compiler (CPU CI included)
-    return pallas_interpret_required()
+
+def interpret_mode() -> bool:
+    """Process-wide interpret decision, resolved on first kernel call.
+
+    Interpret mode covers every backend without a Pallas compiler (CPU CI
+    included); the capability probe lives in repro.compat.
+    """
+    global _INTERPRET
+    if _INTERPRET is None:
+        _INTERPRET = pallas_interpret_required()
+    return _INTERPRET
+
+
+def assert_ref_agreement(kernel_out, ref_out) -> None:
+    """Assert kernel and oracle outputs agree structurally (dtype + shape).
+
+    One checker for every op: outputs may be a single array or any pytree
+    of arrays (the fused quantizer returns a triple). Value comparison is
+    the caller's job — tolerance is per-op, structure is not.
+    """
+    k_leaves, k_def = jax.tree.flatten(kernel_out)
+    r_leaves, r_def = jax.tree.flatten(ref_out)
+    assert k_def == r_def, f"kernel/ref structure mismatch: {k_def} vs {r_def}"
+    for kl, rl in zip(k_leaves, r_leaves):
+        assert kl.shape == rl.shape, f"shape mismatch: {kl.shape} vs {rl.shape}"
+        assert kl.dtype == rl.dtype, f"dtype mismatch: {kl.dtype} vs {rl.dtype}"
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
     return _flash.flash_attention(
         q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
-        interpret=_interpret(),
+        interpret=interpret_mode(),
     )
 
 
@@ -36,8 +70,23 @@ def fused_adam_update(p, g, master, m, v, *, lr, b1, b2, eps, weight_decay, bc1,
         jnp.asarray(weight_decay, jnp.float32), jnp.asarray(bc1, jnp.float32),
         jnp.asarray(bc2, jnp.float32), jnp.zeros((), jnp.float32),
     ])
-    return _fa.fused_adam(p, g, master, m, v, scal, interpret=_interpret())
+    return _fa.fused_adam(p, g, master, m, v, scal, interpret=interpret_mode())
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-6):
-    return _rn.rmsnorm(x, scale, eps=eps, interpret=_interpret())
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=interpret_mode())
+
+
+def decode_paged_attention(q, k_hot, v_hot, k_cold, v_cold, sel, mask, *, n_hot):
+    """Fused single-token decode attention over the paged cache layout
+    (serve/paging.PagedKV) — bit-identical to the lax gather-then-attend
+    path; see kernels/paged_attention.py for the block layout."""
+    return _pa.paged_attention(q, k_hot, v_hot, k_cold, v_cold, sel, mask,
+                               n_hot=n_hot, interpret=interpret_mode())
+
+
+def fused_quantize_ef(ch, me):
+    """One-pass int8 absmax quantize + pack + EF residual update for the
+    manual-sync wire path (dist/collectives) — bit-identical to the three-op
+    sequence it replaces; see kernels/fused_quant.py."""
+    return _fq.fused_quantize_ef(ch, me, interpret=interpret_mode())

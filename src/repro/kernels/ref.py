@@ -47,3 +47,45 @@ def rmsnorm_ref(x, scale, eps: float = 1e-6):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype) * scale
+
+
+def paged_attention_ref(q, k_hot, v_hot, k_cold, v_cold, sel, mask):
+    """Oracle for kernels/paged_attention.py: materialize the ring view
+    (cache row ``r`` lives at ring row ``r % hot_window``), select the
+    canonical rows, then run ``_masked_decode_attn``'s exact op sequence.
+
+    q: (B, 1, Hq, hd); k/v_hot: (B, W, Hkv, hd); k/v_cold: (B, S, Hkv, hd);
+    sel: (B, S) bool (True -> ring canonical); mask: (B, S) fp32 additive.
+    """
+    b, _, hq, hd = q.shape
+    s_kv, hkv = k_cold.shape[1], k_cold.shape[2]
+    w = k_hot.shape[1]
+    g = hq // hkv
+    rows = jnp.arange(s_kv) % w
+    s = sel[..., None, None]
+    k = jnp.where(s, jnp.take(k_hot, rows, axis=1), k_cold)
+    v = jnp.where(s, jnp.take(v_hot, rows, axis=1), v_cold)
+    qh = (q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))).reshape(b, hkv, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(jnp.float32))
+    logits = logits + mask[:, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def fused_quantize_ef_ref(ch, me):
+    """Oracle for kernels/fused_quant.py: the three-op sequence of
+    dist/collectives.manual_int8_ef_reduce_scatter, verbatim.
+
+    ch: (z, *shard) fp32 (EF residual already added at chunk ``me``).
+    Returns (q s8 like ch, scales (z,) fp32, new_err fp32 like ch[0]).
+    """
+    ch = ch.astype(jnp.float32)
+    z = ch.shape[0]
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(ch), axis=tuple(range(1, ch.ndim))), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(ch / scale.reshape((z,) + (1,) * (ch.ndim - 1))),
+                 -127, 127).astype(jnp.int8)
+    own = jnp.take(ch, me, axis=0)
+    new_err = own - jnp.take(q, me, axis=0).astype(jnp.float32) * jnp.take(scale, me)
+    return q, scale, new_err

@@ -158,9 +158,17 @@ def _decode_attention(ap: dict, h: jax.Array, cache: dict, pos: jax.Array,
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
     kv_io = kv_io or RESIDENT_KV
-    full_k, full_v, logits_mask, new_cache = kv_io.update_and_fetch(
-        cache, k, v, pos, cfg, active=active)
-    out = _masked_decode_attn(q, full_k, full_v, logits_mask)
+    attend = getattr(kv_io, "attend", None)
+    if attend is not None:
+        # fused path: the kv_io owns the whole write+attend (the paged
+        # Pallas kernel consumes hot ring + cold pages directly, skipping
+        # the gathered full-cache materialization); falls back internally
+        # to update_and_fetch + _masked_decode_attn when no kernel applies
+        out, new_cache = attend(cache, q, k, v, pos, cfg, active=active)
+    else:
+        full_k, full_v, logits_mask, new_cache = kv_io.update_and_fetch(
+            cache, k, v, pos, cfg, active=active)
+        out = _masked_decode_attn(q, full_k, full_v, logits_mask)
     return out.reshape(b, 1, -1) @ ap["wo"], new_cache
 
 

@@ -181,15 +181,32 @@ class PagedKV:
     every step. ``False`` keeps the original write-through (cold updated
     every token), retained as the reference policy the flush equivalence
     test compares against.
+
+    ``use_kernel`` selects the attention path the ``attend`` hook takes
+    (docs/kernels.md). ``None`` (default) auto-resolves: the fused Pallas
+    paged-attention kernel when the package dispatches to Pallas *and* the
+    stores are device-visible (``fetch_sharding is None``); the lax
+    gather-then-attend rebuild otherwise. The explicit-sharding exclusion is
+    deliberate: the step-builder path pins cold leaves in host memory and
+    shards the cache under GSPMD, and a ``pallas_call`` neither partitions
+    under GSPMD nor reads a host memory space — there the double-buffered
+    per-page fetch pipeline *is* the right engine (and the h2d calibration
+    census depends on its lowered form). ``True``/``False`` force the path
+    (differential tests drive both sides of the parity contract).
     """
 
     entry_keys = ("k_hot", "v_hot", "k_cold", "v_cold")
 
     def __init__(self, spec: PagingSpec, fetch_sharding=None,
-                 flush: bool = True):
+                 flush: bool = True, use_kernel: bool | None = None):
         self.spec = spec
         self.fetch_sharding = fetch_sharding
         self.flush = flush
+        if use_kernel is None:
+            from repro.kernels import pallas_kernels_active
+
+            use_kernel = pallas_kernels_active() and fetch_sharding is None
+        self.use_kernel = use_kernel
 
     # -- page residency -----------------------------------------------------
     def _hot_mask(self, wp: jax.Array, p: int, sliding: bool) -> jax.Array:
@@ -320,9 +337,12 @@ class PagedKV:
                             lambda c, h: c, cold, hot)
 
     # -- the kv_io hook -------------------------------------------------------
-    def update_and_fetch(self, entry: dict, k: jax.Array, v: jax.Array,
-                         pos: jax.Array, cfg: ModelConfig,
-                         active: jax.Array | None = None):
+    def _write(self, entry: dict, k: jax.Array, v: jax.Array,
+               pos: jax.Array, cfg: ModelConfig,
+               active: jax.Array | None):
+        """The per-token cache write shared by both attention paths:
+        hot-ring write plus flush/write-through cold update. Returns
+        ``(hot_k, hot_v, cold_k, cold_v, slot, wp, sliding)``."""
         s = self.spec
         s_kv = entry["k_cold"].shape[1]
         assert s_kv == s.cache_len, (s_kv, s.cache_len)
@@ -339,13 +359,70 @@ class PagedKV:
             # write-through: canonical cold updated every token
             cold_k = KV.write_slot(entry["k_cold"], k, slot, mask=active)
             cold_v = KV.write_slot(entry["v_cold"], v, slot, mask=active)
-        wp = slot // s.page_size
+        return hot_k, hot_v, cold_k, cold_v, slot, slot // s.page_size, sliding
+
+    def update_and_fetch(self, entry: dict, k: jax.Array, v: jax.Array,
+                         pos: jax.Array, cfg: ModelConfig,
+                         active: jax.Array | None = None):
+        hot_k, hot_v, cold_k, cold_v, slot, wp, sliding = self._write(
+            entry, k, v, pos, cfg, active)
         full_k = self._gather(hot_k, cold_k, wp, slot, sliding)
         full_v = self._gather(hot_v, cold_v, wp, slot, sliding)
-        mask = KV.decode_mask(pos, s_kv, sliding)
+        mask = KV.decode_mask(pos, self.spec.cache_len, sliding)
         new_entry = {"k_hot": hot_k, "v_hot": hot_v,
                      "k_cold": cold_k, "v_cold": cold_v}
         return full_k, full_v, mask, new_entry
+
+    def _row_residency(self, wp: jax.Array, slot: jax.Array, sliding: bool,
+                       batch: int) -> jax.Array:
+        """(B, S) row-level residency the kernel's in-pass select consumes:
+        True where the hot ring holds the row the lax ``_gather`` would take.
+
+        Flush mode concatenates ``_take_hot_rows`` per page; write-through
+        broadcasts the all-or-nothing ``_page_is_hot`` scalar (``_gather``'s
+        ``lax.cond`` at row granularity — identical elementwise, and on
+        masked stale rows any choice is absorbed by the NEG_INF mask).
+        """
+        s = self.spec
+        cols = []
+        for p in range(s.n_pages):
+            if self.flush:
+                take = self._take_hot_rows(wp, slot, p, sliding)
+            else:
+                take = self._page_is_hot(wp, p, sliding).reshape((1, 1))
+            cols.append(jnp.broadcast_to(take, (batch, s.page_size)))
+        return jnp.concatenate(cols, axis=1)
+
+    def attend(self, entry: dict, q: jax.Array, k: jax.Array, v: jax.Array,
+               pos: jax.Array, cfg: ModelConfig,
+               active: jax.Array | None = None):
+        """Fused write+attend hook (models.kvcache._decode_attention).
+
+        With ``use_kernel`` the Pallas paged-attention kernel streams
+        hot-ring slices and cold-page tiles straight into the attention
+        pass — the gathered full cache never materializes. Without it,
+        defers to ``update_and_fetch`` + ``_masked_decode_attn`` (the lax
+        rebuild, which the parity tests hold the kernel bitwise against).
+        Returns ``(out (B, 1, Hq, hd), new_entry)``.
+        """
+        if not self.use_kernel:
+            full_k, full_v, mask, new_entry = self.update_and_fetch(
+                entry, k, v, pos, cfg, active=active)
+            return KV._masked_decode_attn(q, full_k, full_v, mask), new_entry
+        from repro.kernels import decode_paged_attention
+
+        hot_k, hot_v, cold_k, cold_v, slot, wp, sliding = self._write(
+            entry, k, v, pos, cfg, active)
+        b = q.shape[0]
+        sel = self._row_residency(wp, slot, sliding, b)
+        mask = KV.decode_mask(pos, self.spec.cache_len, sliding)
+        mask = jnp.broadcast_to(mask.astype(jnp.float32),
+                                (b, self.spec.cache_len))
+        out = decode_paged_attention(q, hot_k, hot_v, cold_k, cold_v,
+                                     sel, mask, n_hot=self.spec.n_hot)
+        new_entry = {"k_hot": hot_k, "v_hot": hot_v,
+                     "k_cold": cold_k, "v_cold": cold_v}
+        return out, new_entry
 
 
 # ---------------------------------------------------------------------------
