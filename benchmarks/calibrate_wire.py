@@ -305,6 +305,42 @@ def calibrate_kernels(*, b: int = 2, hq: int = 8, hkv: int = 2,
     }
 
 
+def calibrate_act_compress(*, b: int = 2, s: int = 64, d: int = 256) -> dict:
+    """Fit the ``act_compress`` pass factor of the compressed activation
+    policies (compress8/compress16) from the traced pallas_call block census
+    of the fused quantize kernel at *activation* shapes.
+
+    The quantize-on-save seam (models/model.compress_act) reshapes each
+    (B, S, D) site tensor to (B*S, D) rows and streams it through the same
+    fused int8 kernel the gradient path uses. Measured: grid_steps x the
+    fp32 row block — the kernel's read inventory per site. Modeled at
+    factor 1: one fp32 pass over the working set, which is the read side of
+    what cost_model.t_act_compress_pass charges per quantize/dequantize
+    stream (the compressed write rides the same factor). A healthy build
+    fits 1.0; drift means the kernel re-reads rows and the policy search is
+    under-pricing compression. Falls back to the analytic factor if the
+    jaxpr introspection API moved."""
+    from repro.kernels.fused_quant import fused_quantize_ef
+
+    rows = b * s
+    args = (jnp.zeros((rows, d), jnp.float32), jnp.int32(0))
+    try:
+        cen = _pallas_block_census(
+            lambda c, m: fused_quantize_ef(c, m, interpret=True), *args)
+    except Exception as e:  # pragma: no cover - jaxpr API drift
+        return {"act_compress": 1.0,
+                "fit": {"error": f"pallas_call introspection failed: {e}"}}
+    ch = [r for r in cen["inputs"] if r["block_shape"] == (1, d)
+          and r["bytes_per_step"] == d * 4]
+    measured = cen["grid_steps"] * sum(r["bytes_per_step"] for r in ch)
+    modeled = rows * d * 4
+    return {
+        "act_compress": round(measured / max(modeled, 1), 4),
+        "fit": {"grid_steps": cen["grid_steps"], "row_blocks": len(ch),
+                "measured_bytes": measured, "modeled_factor1_bytes": modeled},
+    }
+
+
 def dataclasses_asdict_safe(obj) -> dict:
     import dataclasses as _dc
 
@@ -444,6 +480,13 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
     factors["serve"]["paged_attn"] = kernels["paged_attn"]
     factors["manual"]["fused_quant"] = kernels["fused_quant"]
 
+    # activation quantize-pass factor (ISSUE-9; same census, activation shapes).
+    # The compress seam is sync-mode independent — the same kernel runs under
+    # both the xla and manual paths — so the one fit lands in both tables.
+    act = calibrate_act_compress()
+    factors["xla"]["act_compress"] = act["act_compress"]
+    factors["manual"]["act_compress"] = act["act_compress"]
+
     entry = {
         "wire_factors": factors,
         "overlap": modeled_overlap(steps_model, mesh),
@@ -454,6 +497,7 @@ def calibrate(steps_model: str = "llama3-405b", keys: tuple | None = None) -> di
             "measured": measured,
             "serve": serve["fit"],
             "kernels": kernels["fit"],
+            "act_compress": act["fit"],
         },
     }
     if ef_factor is not None:
@@ -521,6 +565,15 @@ def main() -> int:
                   f"factor {fq} outside the sane band [0.5, 2.0] — the "
                   "kernel no longer reads the chunk working set exactly "
                   "once per grid step")
+            return 1
+        ac = entry["wire_factors"]["manual"].get("act_compress")
+        print(f"[calibrate_wire --dry-run] act_compress={ac}")
+        if ac is None or not (0.5 <= ac <= 2.0):
+            print("[calibrate_wire --dry-run] FAIL: activation quantize-pass "
+                  f"factor {ac} outside the sane band [0.5, 2.0] — the "
+                  "compress8 save seam no longer streams each activation "
+                  "site once per quantize pass, so the per-block policy "
+                  "search is mispricing compression")
             return 1
         hf = entry.get("overlap", {}).get("hidden_comm_fraction")
         print(f"[calibrate_wire --dry-run] hidden_comm_fraction={hf}")

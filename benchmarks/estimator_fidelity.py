@@ -50,6 +50,11 @@ def plans_under_test(nc: int, nb: int) -> list[tuple[str, MemoryPlan]]:
         ("zero", MemoryPlan(nc, nb)),
         ("zero_buf", MemoryPlan(nc, nb, n_buffer=nc)),
         ("ubatch2", MemoryPlan(nc, nb, n_persist=nc, microbatch=2)),
+        # ISSUE-9 row: uniform compress8 activation policy — the quantize-on-
+        # save seam must shrink what XLA keeps live without breaking the
+        # analytic estimate (compressed bytes resident, interiors remat)
+        ("compress8", MemoryPlan(nc, nb, n_persist=nc,
+                                 act_policies=("compress8",) * nb)),
     ]
 
 
@@ -71,6 +76,11 @@ def manual_plans_under_test(nc: int, nb: int) -> list[tuple[str, MemoryPlan]]:
         ("manual_zero3_overlap", mk(zero_stage=3, n_buffer=nc, microbatch=2)),
         ("manual_zero3_serial",
          mk(zero_stage=3, n_buffer=nc, microbatch=2, overlap=False)),
+        # ISSUE-9 row: compressed activations on the manual lazy-gather path —
+        # the compress policy must compose with _save_acts_not_lazy_gathers
+        # (gathered weights rematerialized, never quantized)
+        ("manual_zero3_compress8",
+         mk(zero_stage=3, act_policies=("compress8",) * nb)),
     ]
 
 

@@ -23,6 +23,10 @@ Beyond-paper axes (docs/cost_model.md documents every knob and its units):
   * ``compress`` — gradient-sync wire compression ("auto" by default now that
     the wire factors are calibrated against measured dry-run bytes; see
     benchmarks/calibrate_wire.py and cost_model.wire_factor);
+  * per-block activation policies — after the scalar search settles the
+    placement axes, ``search_act_policies`` greedily refines the winning
+    cell's activation vector over {keep, compress8, remat} ("compress until
+    feasible, then buy back latency"); see ACT_LADDER;
   * ``sync`` — who owns the gradient reduction: "xla" (GSPMD's reduce,
     compression is numerics-only) or "manual" (shard_map sync with the
     compressed payload on the wire: DDP-style compressed all-gather for
@@ -85,6 +89,121 @@ def _grid(n: int, max_points: int = 9) -> list[int]:
     step = max(1, n // (max_points - 1))
     vals = sorted(set(list(range(0, n + 1, step)) + [n]))
     return vals
+
+
+# The searched activation-policy ladder, ordered memory-down / latency-up:
+# keep everything -> quantize the save sites to int8 -> full remat.
+# ``compress16`` is a lattice point the cost model prices but the search
+# skips: it moves twice compress8's bytes for the same partial-recompute
+# fraction, so it is dominated in (time, memory) — it exists for
+# numerics-conservative hand-written plans, not for the optimizer.
+ACT_LADDER = ("none", "compress8", "checkpoint")
+
+
+def search_act_policies(
+    w: Workload,
+    base: MemoryPlan,
+    capacity_bytes: float | None = None,
+) -> SearchResult:
+    """Greedy per-block activation-policy search under the memory budget.
+
+    The classic "compress until feasible, then buy back latency" sweep over
+    the per-block policy vector (MemoryPlan.act_policies), starting from
+    ``base``'s lowered vector with every non-swap block on the ladder
+    (swap blocks are pinned — their trade is the host link, owned by the
+    scalar search):
+
+      phase 1 (degrade, front-to-back — mirroring the n_checkpoint prefix):
+        step blocks none -> compress8, then compress8 -> checkpoint, one
+        block at a time, stopping at the first feasible vector;
+      phase 2 (buy back, back-to-front): upgrade one rung at a time wherever
+        the result still fits and the modeled step time does not regress,
+        sweeping until a full pass changes nothing.
+
+    Fully deterministic: no tie randomization, fixed sweep orders. Returns
+    the vector plan (feasible=False when even remat-all overflows)."""
+    t0 = time.time()
+    capacity = (capacity_bytes if capacity_bytes is not None
+                else w.hw.capacity_bytes())
+    vec = list(base.block_policies())
+    evaluated = 0
+
+    def mk(v) -> MemoryPlan:
+        return dataclasses.replace(
+            base, n_swap=0, n_checkpoint=0, act_policies=tuple(v))
+
+    def fits(v) -> bool:
+        nonlocal evaluated
+        evaluated += 1
+        return estimate_memory(w, mk(v)).peak < capacity
+
+    feasible = fits(vec)
+    for target in ACT_LADDER[1:]:
+        if feasible:
+            break
+        for b in range(len(vec)):
+            if feasible:
+                break
+            cur = vec[b]
+            if (cur not in ACT_LADDER
+                    or ACT_LADDER.index(cur) >= ACT_LADDER.index(target)):
+                continue
+            vec[b] = target
+            feasible = fits(vec)
+
+    if feasible:
+        best_rt = estimate_runtime(w, mk(vec)).t_iteration
+        changed = True
+        while changed:
+            changed = False
+            for b in range(len(vec) - 1, -1, -1):
+                cur = vec[b]
+                if cur not in ACT_LADDER or cur == "none":
+                    continue
+                trial = list(vec)
+                trial[b] = ACT_LADDER[ACT_LADDER.index(cur) - 1]
+                if not fits(trial):
+                    continue
+                rt = estimate_runtime(w, mk(trial)).t_iteration
+                if rt <= best_rt:
+                    vec, best_rt, changed = trial, rt, True
+
+    plan = mk(vec)
+    res = SearchResult(plan, estimate_runtime(w, plan),
+                       estimate_memory(w, plan), evaluated,
+                       time.time() - t0, feasible)
+    return res
+
+
+def megatrain_plan(w: Workload, checkpoint_all: bool = True) -> MemoryPlan:
+    """MegaTrain-style all-host optimizer tier (PAPERS.md).
+
+    Every chunk rides the ZeRO-Offload split: bf16 param/grad shards stay in
+    HBM (gathers ride ICI, not the host link), while the fp32 Adam moments,
+    master copy, and the update itself live on host (``host_optimizer`` —
+    the existing ``adam_update(host=...)`` tuple in train/step_builder).
+    With remat-all this is the minimal-state-footprint plan short of
+    activation swapping; the activation axis is then closed by taking the
+    smallest gradient-accumulation split (and, only if that is not enough,
+    sequence-sharding the boundaries) that fits — which is how 100B-class
+    configs plan onto 16 GB chips (launch/dryrun.py --megatrain demonstrates
+    and asserts the fit). Returns the most frugal candidate even when
+    nothing fits; callers check estimate_memory themselves."""
+    nc, nb = w.n_chunks, w.n_blocks
+    seqs = max(int(w.seqs_per_device), 1)
+    mbs = [m for m in (1, 2, 4, 8, 16, 32, 64, 128, 256) if m <= seqs]
+    plan = None
+    for sp in (False, True):
+        for mb in mbs:
+            plan = MemoryPlan(
+                nc, nb, n_persist=0, n_host=nc, host_params=False,
+                host_optimizer=True,
+                n_checkpoint=nb if checkpoint_all else 0,
+                microbatch=mb, seq_shard_acts=sp,
+            )
+            if _fits(w, plan, w.hw.capacity_bytes()):
+                return plan
+    return plan
 
 
 def search(
@@ -155,7 +274,17 @@ def search(
             wl, capacity, ubs, sp_vals, gc_vals, use_dp, real_tp, allow_host,
             allow_swap, max_checkpoint_points, best, evaluated, overlap,
         )
-    w_final = w
+    if best is not None:
+        # refine the winning cell's activation axis: the scalar search only
+        # saw the uniform n_checkpoint prefixes; the greedy vector sweep can
+        # buy back remat latency with compressed saves where capacity allows.
+        # Adopted only on a strict improvement, so uniform winners keep their
+        # scalar (vector-free) plan representation.
+        wl = dp_view(w) if best.plan.dp_only else w
+        ref = search_act_policies(wl, best.plan, capacity)
+        evaluated += ref.evaluated
+        if ref.feasible and ref.runtime.t_iteration < best.runtime.t_iteration:
+            best = ref
     if best is None:
         # nothing fits: report the minimal-footprint plan as infeasible
         plan = MemoryPlan(

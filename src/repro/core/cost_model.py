@@ -66,13 +66,20 @@ GRAD_WIRE_FACTOR = {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5}
 # from the bf16 all-gather bytes of a zero3 program vs the modeled
 # (z-1)/z-per-chunk topology bytes.
 DEFAULT_WIRE_FACTORS = {
-    "xla": {"none": 1.0, "bf16": 1.0, "int8_ef": 1.0},
+    # "act_compress" scales the quantize/dequantize HBM streams of the
+    # compressed activation policies (compress8/compress16, priced by
+    # Workload.t_act_compress_pass) against the analytic read-full +
+    # write-compressed byte count — calibrated from the pallas_call block
+    # census of the fused quantize kernel at activation shapes
+    # (benchmarks/calibrate_wire.py's act_compress config). Present under
+    # both sync modes: the policy seam is sync-agnostic.
+    "xla": {"none": 1.0, "bf16": 1.0, "int8_ef": 1.0, "act_compress": 1.0},
     # "fused_quant" scales the *HBM pass* count of the fused int8
     # quantize+pack kernel (kernels/fused_quant.py) against the analytic
     # one-pass model — calibrated from the pallas_call block-spec bytes of
     # the jitted kernel (benchmarks/calibrate_wire.py's kernel configs).
     "manual": {"none": 1.0, "bf16": 1.0, "int8_ef": 0.5, "int8_ef_rs": 0.5,
-               "gather_bf16": 1.0, "fused_quant": 1.0},
+               "gather_bf16": 1.0, "fused_quant": 1.0, "act_compress": 1.0},
     # Serving pipelines (repro.serve). "h2d_page" scales the cold-page
     # fetch bytes of the paged decode step against the modeled
     # pages x page_bytes x attention-layers product — calibrated from the
@@ -88,6 +95,17 @@ DEFAULT_WIRE_FACTORS = {
 # fp32 error-feedback residual per param = 2x the bf16 grad bytes; the
 # calibration JSON can override with the measured state-size delta.
 DEFAULT_EF_RESIDUAL_FACTOR = 2.0
+
+# Fraction of a block's forward a compressed-activation block replays in BWD.
+# Full remat replays everything between scan boundaries (1.0); the compress
+# policies save each layer's quantized site outputs (norm1/mixer/mlp — see
+# models/model.apply_position), so the replay only recomputes the segments
+# *between* saved sites: roughly half the forward's matmul work (the mixer
+# and mlp matmuls re-run from dequantized inputs; their saved outputs are
+# not re-derived from scratch). This is what makes compress strictly cheaper
+# than uniform remat in the searched lattice — it buys memory with bytes
+# (quantize/dequant streams) instead of FLOPs.
+ACT_COMPRESS_RECOMPUTE = 0.5
 
 # Calibration JSON schema version this build writes/understands. The loader
 # is forward-compatible by construction: any factor key absent from a loaded
@@ -348,9 +366,44 @@ class Workload:
             return boundary / max(plan.ckpt_group, 1)
         if policy == "swap":
             return boundary
+        if policy in ("compress8", "compress16"):
+            # the scan carries stay full precision; the per-layer site
+            # tensors persist as the quantized payload
+            return boundary + self.compressed_act_bytes(plan, policy)
         scale = self.seqs_per_ubatch(plan)
         inner = self.block.act_residual_bytes * scale / self.mesh.tp_degree
         return boundary + inner
+
+    # ---- compressed activation policy (compress8 / compress16) -----------
+    def act_sites_per_position(self) -> float:
+        """Save sites one layer tags through the quantize-on-save seam
+        (models/model.apply_position): norm1 output, mixer output, mlp/moe
+        output — plus the cross-attention site on encoder-decoder stacks.
+        Each site is one (B, S, D) boundary-shaped tensor."""
+        return 4.0 if self.cfg.kind == "encdec" else 3.0
+
+    def act_site_bytes_per_block(self, plan: MemoryPlan) -> float:
+        """Full-precision bytes of one block's save-site tensors."""
+        return (self.positions * self.act_sites_per_position()
+                * self.boundary_dev_bytes(plan))
+
+    def compressed_act_bytes(self, plan: MemoryPlan, policy: str) -> float:
+        """One block's quantized payload resident FWD->BWD: int8 + per-row
+        scales for compress8 (~1 B/elem), bf16 downcast for compress16."""
+        import numpy as _np
+
+        itemsize = _np.dtype(self.cfg.dtype).itemsize
+        ratio = (1.0 if policy == "compress8" else 2.0) / itemsize
+        return self.act_site_bytes_per_block(plan) * ratio
+
+    def t_act_compress_pass(self, plan: MemoryPlan, policy: str) -> float:
+        """HBM time of one quantize (FWD save) or dequantize (BWD use)
+        stream over one block's sites: read full + write compressed (or the
+        reverse), scaled by the calibrated act_compress factor."""
+        nbytes = (self.act_site_bytes_per_block(plan)
+                  + self.compressed_act_bytes(plan, policy))
+        return self.hw.hbm_time(
+            nbytes * wire_factor(plan.sync_mode, "act_compress"))
 
     def recompute_workspace(self, plan: MemoryPlan) -> float:
         """Peak residuals live while one rematted region is re-run in BWD:
@@ -409,10 +462,19 @@ def step_totals(w: Workload, plan: MemoryPlan) -> tuple[float, float]:
     flops = bytes_ = 0.0
     for c in blocks:
         pol = plan.block_policy(c.block_index)
-        recompute = 1.0 if pol in ("checkpoint", "swap") and w.shape.is_training else 0.0
+        recompute = 0.0
+        if w.shape.is_training:
+            if pol in ("checkpoint", "swap"):
+                recompute = 1.0
+            elif pol in ("compress8", "compress16"):
+                recompute = ACT_COMPRESS_RECOMPUTE
         mult = (3.0 + recompute) if w.shape.is_training else 1.0
         flops += f_fwd * mult * mb
         bytes_ += b_fwd * mult * mb
+        if pol in ("compress8", "compress16") and w.shape.is_training:
+            # quantize-on-save (FWD) + dequantize-on-use (BWD) streams
+            bytes_ += 2.0 * (w.act_site_bytes_per_block(plan)
+                             + w.compressed_act_bytes(plan, pol)) * mb
     # head matmul + embed traffic
     tokens_dev = scale * w.shape.seq_len * mb
     head_flops = 2.0 * tokens_dev * w.cfg.d_model * w.cfg.vocab_size / mesh.tp_degree
@@ -674,6 +736,10 @@ def estimate_runtime(w: Workload, plan: MemoryPlan) -> RuntimeBreakdown:
     t_fwd = 0.0
     for i in range(n + 1):
         t_comp = w.t_comp_fwd(chunks[i - 1], plan) if i >= 1 else 0.0
+        if i >= 1 and chunks[i - 1].is_block:
+            pol_f = plan.block_policy(chunks[i - 1].block_index)
+            if pol_f in ("compress8", "compress16"):
+                t_comp += w.t_act_compress_pass(plan, pol_f)  # quantize-on-save
         t_pref = 0.0
         if i < n:
             c = chunks[i]
@@ -693,6 +759,13 @@ def estimate_runtime(w: Workload, plan: MemoryPlan) -> RuntimeBreakdown:
         t_comp = w.t_comp_bwd(c, plan)
         if c.is_block and plan.block_policy(c.block_index) == "checkpoint":
             t_comp += w.t_comp_fwd(c, plan)  # T_recomp
+        if c.is_block and plan.block_policy(c.block_index) in ("compress8",
+                                                              "compress16"):
+            # partial replay of the segments between saved sites + the
+            # dequantize-on-use stream
+            pol_b = plan.block_policy(c.block_index)
+            t_comp += (ACT_COMPRESS_RECOMPUTE * w.t_comp_fwd(c, plan)
+                       + w.t_act_compress_pass(plan, pol_b))
         if c.is_block and plan.block_policy(c.block_index) == "swap":
             # activation fetch from host for this block (overlappable but
             # competes on the host link)
@@ -858,7 +931,12 @@ def estimate_memory(w: Workload, plan: MemoryPlan, ce_chunk: int = 2048) -> Memo
     transient = w.block.peak_transient_bytes * scale / tp / w.positions
     for b in range(w.n_blocks - 1, -1, -1):
         pol = plan.block_policy(b)
-        extra = recompute_ws if pol in ("checkpoint", "swap") else 0.0  # I_checkpoint term
+        # I_checkpoint term; the compress policies replay per-position
+        # segments from the dequantized sites, so they carry the same
+        # per-position replay workspace as checkpoint
+        extra = (recompute_ws
+                 if pol in ("checkpoint", "swap", "compress8", "compress16")
+                 else 0.0)
         cur_peak = states + gathered + cur + extra + grad_ws + transient
         peak_bwd = max(peak_bwd, cur_peak)
         traj.append(cur_peak)

@@ -19,6 +19,15 @@ Block b (one per chunk; chunk == superblock == transformer block group):
                                      adaptation: XLA scan AD owns the carries
   n_swap <= b < n_swap + n_ckpt   -> gradient checkpointing (remat)
   otherwise                       -> unoptimized (keep activations)
+The scalar {n_swap, n_checkpoint} boundary is a *lowering*: it describes the
+uniform prefix layouts the paper searches. ``act_policies`` generalizes it to
+an explicit per-block policy vector over
+{none|checkpoint|swap|compress8|compress16} (aliases keep->none,
+remat->checkpoint accepted), making the activation axis a searched dimension
+like placement — the compress entries save activations through the
+quantize-on-save custom_vjp (models/model.compress_act) instead of holding
+full precision or recomputing. When ``act_policies`` is None every existing
+plan keeps its scalar-knob semantics unchanged.
 Buffers: the last ``n_buffer`` non-persistent chunks keep their *gathered*
 weights live from forward to backward (no re-gather in BWD) — the analogue of
 chunk-buffer reuse; the backward pass visits those chunks first, which is
@@ -102,6 +111,18 @@ class MemoryPlan:
     #           (sum) — the pre-overlap baseline the benchmarks compare to.
     # The xla path ignores this knob: GSPMD's scheduler owns overlap there.
     overlap: bool = True
+    # Per-block activation policy vector (tentpole of the adaptive-activation
+    # PR): entry b in {"none","checkpoint","swap","compress8","compress16"}
+    # decides what block b saves for backward. None (default) lowers the
+    # scalar {n_swap, n_checkpoint} prefix knobs to the uniform vector via
+    # block_policy(), so every pre-vector plan is unchanged. Aliases
+    # "keep"->"none" and "remat"->"checkpoint" are normalized on construction.
+    # Setting a vector requires the scalar knobs stay 0 (one source of truth).
+    act_policies: tuple[str, ...] | None = None
+
+    #: policies block_policy() may return / act_policies may contain
+    ACT_POLICIES = ("none", "checkpoint", "swap", "compress8", "compress16")
+    _ACT_ALIASES = {"keep": "none", "remat": "checkpoint"}
 
     @property
     def gather_prefetch_depth(self) -> int:
@@ -134,6 +155,16 @@ class MemoryPlan:
         assert self.grad_compress in ("none", "bf16", "int8_ef"), self.grad_compress
         assert self.sync_mode in ("xla", "manual"), self.sync_mode
         assert self.zero_stage in (2, 3), self.zero_stage
+        if self.act_policies is not None:
+            pols = tuple(self._ACT_ALIASES.get(p, p) for p in self.act_policies)
+            object.__setattr__(self, "act_policies", pols)
+            assert len(pols) == self.n_blocks, (len(pols), self.n_blocks)
+            for p in pols:
+                assert p in self.ACT_POLICIES, p
+            # the vector replaces the scalar prefix knobs — both set is
+            # ambiguous, so the constructor refuses it
+            assert self.n_swap == 0 and self.n_checkpoint == 0, (
+                "act_policies replaces n_swap/n_checkpoint; keep them 0")
 
     # ---- n_host facade ----------------------------------------------------
     # ``n_host`` is overloaded: training plans count host-offloaded parameter
@@ -196,7 +227,8 @@ class MemoryPlan:
         Ineligible plans keep ``sync_mode="xla"`` semantics; the autotuner
         only proposes "manual" for plans with a non-None kind.
         """
-        if self.n_swap > 0 or self.host_param_chunks > 0 or self.zero1_persistent:
+        if ("swap" in self.block_policies() or self.host_param_chunks > 0
+                or self.zero1_persistent):
             return None
         if self.n_persist == self.n_chunks:
             return "ddp" if (tp_degree == 1 or self.dp_only) else None
@@ -210,6 +242,8 @@ class MemoryPlan:
 
     # ---- block policy ----------------------------------------------------
     def block_policy(self, b: int) -> str:
+        if self.act_policies is not None:
+            return self.act_policies[b]
         if b < self.n_swap:
             return "swap"
         if b < self.n_swap + self.n_checkpoint:
@@ -218,6 +252,10 @@ class MemoryPlan:
 
     def block_policies(self) -> list[str]:
         return [self.block_policy(b) for b in range(self.n_blocks)]
+
+    def compressed_blocks(self) -> int:
+        """How many blocks save through the quantize-on-save seam."""
+        return sum(p in ("compress8", "compress16") for p in self.block_policies())
 
     # ---- chunk placement ---------------------------------------------------
     def chunk_placement(self, i: int) -> str:
@@ -238,10 +276,20 @@ class MemoryPlan:
         comp = "" if self.grad_compress == "none" else f" comm={self.grad_compress}"
         if self.sync_mode != "xla":
             comp += f" sync={self.sync_mode}"
-            if self.n_persist < self.n_chunks:
-                comp += f" zstage={self.zero_stage}"
-            if not self.overlap:
-                comp += " overlap=off"
+            comp += f" zstage={self.zero_stage}"
+            comp += f" overlap={'on' if self.overlap else 'off'}"
+        if self.ckpt_group != 1:
+            comp += f" ckptg={self.ckpt_group}"
+        if self.act_policies is not None:
+            runs, prev = [], None
+            for p in self.act_policies:
+                if prev is not None and p == prev[0]:
+                    prev[1] += 1
+                else:
+                    prev = [p, 1]
+                    runs.append(prev)
+            comp += " acts=" + ",".join(
+                p if n == 1 else f"{p}x{n}" for p, n in runs)
         return (
             f"persist={self.n_persist}/{self.n_chunks} buffer={self.n_buffer} "
             f"host={self.n_host} swap={self.n_swap} ckpt={self.n_checkpoint} "

@@ -20,6 +20,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.compat import optimization_barrier
@@ -30,6 +31,7 @@ from repro.models import moe as MOE
 from repro.models.layers import NONE, TP, ZERO, LAYER, ParamDef
 
 ACT = "act"  # checkpoint_name for offloadable activations
+ACT_CMP = "act_cmp"  # checkpoint_name for compressed (quantized) activations
 GATHERED_W = "gathered_w"  # checkpoint_name for gathered (unsharded) weights
 
 
@@ -150,6 +152,120 @@ def shard_act(x: jax.Array, kind: str = "bsd") -> jax.Array:
     return _ACT_SHARDER(x, kind)
 
 
+# ---------------------------------------------------------------------------
+# Compressed activation saves (quantize-on-save / dequantize-on-use)
+# ---------------------------------------------------------------------------
+# Tri-state dispatch for the int8 activation quantizer, mirroring
+# dist.collectives.set_fused_quant: None = auto (the PR-8 fused Pallas
+# quantize kernel when it can run *compiled* — interpret mode unrolls the
+# (rows,) grid and is unusable at activation sizes), True/False = forced.
+_ACT_QUANT_KERNEL: bool | None = None
+
+
+def set_act_quant_kernel(enabled: bool | None) -> None:
+    global _ACT_QUANT_KERNEL
+    _ACT_QUANT_KERNEL = enabled
+
+
+def act_quant_kernel_active() -> bool:
+    if _ACT_QUANT_KERNEL is not None:
+        return _ACT_QUANT_KERNEL
+    from repro.compat import pallas_interpret_required, pallas_supported
+
+    return pallas_supported() and not pallas_interpret_required()
+
+
+def _quantize_rows(x2d: jax.Array):
+    """Per-row absmax int8 quantize of a (rows, d) fp32 array -> (q, scale).
+
+    Dispatches to the fused Pallas quantize/pack kernel (kernels package)
+    when it runs compiled, else the vectorized ref oracle — the two are
+    bitwise-identical (tests/test_paged_attention_kernel.py), so the seam
+    never changes numerics, only where the bytes are produced."""
+    me = jnp.int32(0)  # EF slot unused for activations: the error is discarded
+    if act_quant_kernel_active():
+        from repro.kernels import fused_quantize_ef
+
+        q, s, _ = fused_quantize_ef(x2d, me)
+    else:
+        from repro.kernels.ref import fused_quantize_ef_ref
+
+        q, s, _ = fused_quantize_ef_ref(x2d, me)
+    return q, s
+
+
+def compress_act(x: jax.Array, mode: str = "compress8") -> jax.Array:
+    """Save-compressed seam: the activation twin of ``Run.lazy_gather``.
+
+    Under a ``save_only_these_names(ACT_CMP, ...)`` remat policy the block
+    holds only the quantized payload FWD->BWD and dequantizes at point of
+    use in the backward replay; everything between compressed sites is
+    rematerialized. Two parts make that true:
+
+      * the quantized payload (q, scale) is produced by *named plain eqn
+        outputs* (``checkpoint_name(·, ACT_CMP)``) — custom_vjp residuals do
+        not persist under jax.checkpoint, named saveables do. The quantizer
+        itself is wrapped in a custom_vjp so AD never traces the Pallas call
+        (its cotangent to x is zero — the gradient does not flow through the
+        rounding);
+      * a dequantize-on-use custom_vjp ``use(q, s, x)`` whose primal reads
+        ONLY (q, s) — so the replay reconstructs the activation from the
+        saved payload, not from x — and whose VJP routes the cotangent
+        straight through to x (the straight-through estimator; absmax
+        clipping makes the identity exact up to rounding).
+
+    ``compress16`` is the degenerate lattice point: a named bf16 downcast
+    (linear, differentiable — no custom_vjp needed).
+    """
+    if mode == "compress16":
+        return checkpoint_name(x.astype(jnp.bfloat16), ACT_CMP).astype(x.dtype)
+    assert mode == "compress8", mode
+    dtype = x.dtype
+    shape = x.shape
+    rows = math.prod(shape[:-1])
+    x2d = x.astype(jnp.float32).reshape(rows, shape[-1])
+
+    @jax.custom_vjp
+    def quantize(x2d):
+        return _quantize_rows(x2d)
+
+    def q_fwd(x2d):
+        return quantize(x2d), None
+
+    def q_bwd(_, ct):
+        return (jnp.zeros((rows, shape[-1]), jnp.float32),)
+
+    quantize.defvjp(q_fwd, q_bwd)
+    q, s = quantize(x2d)
+    q = checkpoint_name(q, ACT_CMP)
+    s = checkpoint_name(s, ACT_CMP)
+
+    def _deq(q, s):
+        return (q.astype(jnp.float32) * s[:, None]).reshape(shape).astype(dtype)
+
+    @jax.custom_vjp
+    def use(q, s, x):
+        return _deq(q, s)
+
+    def u_fwd(q, s, x):
+        return _deq(q, s), None
+
+    def u_bwd(_, ct):
+        return (np.zeros((rows, shape[-1]), jax.dtypes.float0),
+                jnp.zeros((rows,), jnp.float32), ct.astype(dtype))
+
+    use.defvjp(u_fwd, u_bwd)
+    return use(q, s, x)
+
+
+def save_act(x: jax.Array, mode: str = "none") -> jax.Array:
+    """Tag an activation save site: compressed for the compress policies,
+    the plain offloadable ACT name otherwise."""
+    if mode in ("compress8", "compress16"):
+        return compress_act(x, mode)
+    return checkpoint_name(x, ACT)
+
+
 def gather_weights(params, specs=None):
     """Mark weights as gathered at point-of-use (named for remat policies).
 
@@ -187,28 +303,33 @@ def apply_position(
     positions: jax.Array | None = None,
     memory: jax.Array | None = None,
     attn_impl: str = "blockwise",
+    act_mode: str = "none",
 ) -> tuple[jax.Array, jax.Array]:
-    """One layer (superblock position). Returns (x, aux_loss)."""
+    """One layer (superblock position). Returns (x, aux_loss).
+
+    ``act_mode``: how this layer's save sites are tagged — "none" names them
+    ACT (keep/offload/remat decided by the surrounding policy), the compress
+    modes route them through the quantize-on-save seam (``save_act``)."""
     aux = jnp.zeros((), jnp.float32)
     x = shard_act(x, "enter")  # SP: gather seq-sharded boundary for compute
     h = L.apply_norm(pparams["norm1"], x, cfg.norm)
-    h = checkpoint_name(h, ACT)
+    h = save_act(h, act_mode)
     if "attn" in pparams:
         mix = L.attention_block(pparams["attn"], h, cfg, positions=positions, impl=attn_impl)
     else:
         mix = M2.apply_mamba2(pparams["mamba"], h, cfg)
-    x = x + checkpoint_name(mix, ACT)
+    x = x + save_act(mix, act_mode)
     if memory is not None and "xattn" in pparams:
         hx = L.apply_norm(pparams["norm_x"], x, cfg.norm)
-        x = x + checkpoint_name(L.cross_attention_block(pparams["xattn"], hx, memory, cfg), ACT)
+        x = x + save_act(L.cross_attention_block(pparams["xattn"], hx, memory, cfg), act_mode)
     if "moe" in pparams:
         h2 = L.apply_norm(pparams["norm2"], x, cfg.norm)
         out, moe_aux = MOE.apply_moe(pparams["moe"], h2, cfg)
-        x = x + checkpoint_name(out, ACT)
+        x = x + save_act(out, act_mode)
         aux = aux + moe_aux
     elif "mlp" in pparams:
         h2 = L.apply_norm(pparams["norm2"], x, cfg.norm)
-        x = x + checkpoint_name(L.apply_mlp(pparams["mlp"], h2, cfg.mlp), ACT)
+        x = x + save_act(L.apply_mlp(pparams["mlp"], h2, cfg.mlp), act_mode)
     return shard_act(x), aux
 
 
@@ -310,6 +431,13 @@ def _remat_policy(act_policy: str, buffered: bool, lazy: bool = False):
             pol = cp.save_anything_except_these_names(GATHERED_W)
     elif act_policy == "checkpoint":
         pol = cp.save_only_these_names(GATHERED_W) if buffered else cp.nothing_saveable
+    elif act_policy in ("compress8", "compress16"):
+        # save the quantized payload (and the gathered weights when the run
+        # buffers them); save_only_* default-excludes everything else, so the
+        # ZeRO-3 lazy gathers are never saved — let alone quantized — and the
+        # interiors between compressed sites rematerialize from the payload
+        pol = (cp.save_only_these_names(ACT_CMP, GATHERED_W) if buffered
+               else cp.save_only_these_names(ACT_CMP))
     elif act_policy == "swap":
         pol = cp.save_and_offload_only_these_names(
             names_which_can_be_saved=[GATHERED_W] if buffered else [],
@@ -329,7 +457,7 @@ class Run:
 
     params: dict  # stacked over this run's repeats
     n_repeats: int
-    act_policy: str = "none"  # none | checkpoint | swap
+    act_policy: str = "none"  # none | checkpoint | swap | compress8 | compress16
     buffered: bool = True  # gathered weights saved fwd->bwd?
     persistent: bool = False  # params replicated over zero axes (no gather)
     gather_specs: Any = None  # per-repeat pytree of NamedSharding (ZeRO dropped)
@@ -372,6 +500,8 @@ def apply_runs(
         g = max(1, min(g, run.n_repeats))
         while run.n_repeats % g:
             g -= 1  # group must tile the run
+        act_mode = (run.act_policy
+                    if run.act_policy in ("compress8", "compress16") else "none")
 
         if (run.prefetch and lazy and run.buffered and run.act_policy == "none"
                 and g == 1 and run.n_repeats >= 2):
@@ -380,13 +510,13 @@ def apply_runs(
             continue
 
         if g == 1:
-            def body(carry, sl, _run=run, _pol=pol):
+            def body(carry, sl, _run=run, _pol=pol, _mode=act_mode):
                 x, aux = carry
                 bp, ef = sl
                 x, a = apply_superblock(
                     bp, x, cfg, gather_specs=_run.gather_specs, remat_policy=_pol,
                     lazy_gather=_run.lazy_gather, ef=ef,
-                    memory=memory, attn_impl=attn_impl,
+                    memory=memory, attn_impl=attn_impl, act_mode=_mode,
                 )
                 return (x, aux + a), None
 

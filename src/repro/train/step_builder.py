@@ -5,7 +5,10 @@ This is where ProTrain's plan becomes an XLA program:
   * chunk placement  -> per-run parameter NamedShardings (persist = replicated
     over ZeRO axes; hbm = sharded; host = sharded + pinned_host memory kind)
   * n_buffer         -> gathered-weight save policy (re-gather in BWD or not)
-  * n_swap/n_ckpt    -> per-position jax.checkpoint policies (offload/remat)
+  * block policies   -> per-position jax.checkpoint policies (keep / remat /
+    host-offload / quantize-on-save): plan.block_policy(b) — the scalar
+    n_swap/n_ckpt prefixes or the explicit act_policies vector — splits the
+    layer stack into runs, one policy per run
   * microbatch       -> gradient-accumulation scan
   * host_optimizer   -> optimizer states of host chunks live in pinned_host
   * sync_mode        -> who owns the gradient reduction; lowered through the
@@ -51,7 +54,7 @@ class RunLayout:
     length: int
     placement: str  # persist | hbm | host
     buffered: bool
-    act_policy: str  # none | checkpoint | swap
+    act_policy: str  # none | checkpoint | swap | compress8 | compress16
 
 
 def plan_runs(plan: MemoryPlan, n_repeats: int) -> list[RunLayout]:
