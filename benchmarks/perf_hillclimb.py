@@ -50,11 +50,16 @@ def get_plan(arch, shape_name, variant: str):
 
 
 def run(cell: str, variant: str, out_path: str | None):
+    from repro import obs
     from repro.launch.dryrun import run_cell
 
     arch, shape = CELLS[cell]
     res = get_plan(arch, shape, variant)
-    rec = run_cell(arch, shape, False, sp=variant, plan_override=res.plan)
+    # run_cell's lower_s/compile_s come from the same obs spans this wraps,
+    # so an installed tracer sees the variant end to end (one clock)
+    with obs.current_telemetry().tracer.span(
+            "hillclimb.variant", cell=cell, variant=variant):
+        rec = run_cell(arch, shape, False, sp=variant, plan_override=res.plan)
     rec["variant"] = variant
     rec["modeled_t_iter"] = res.runtime.t_iteration
     rec["modeled_feasible"] = res.feasible

@@ -25,6 +25,7 @@ from repro.compat import ensure_jax_compat
 
 ensure_jax_compat()
 
+from repro import obs  # noqa: E402
 from repro.configs import get_config, reduced  # noqa: E402
 from repro.configs.base import ShapeConfig  # noqa: E402
 from repro.core.plan import MemoryPlan  # noqa: E402
@@ -60,7 +61,11 @@ def main() -> int:
     ap.add_argument("--compiled-memory", action="store_true",
                     help="also AOT-compile the step to report XLA's per-"
                          "device argument bytes (a second full compile)")
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="also append every log line as a structured JSONL "
+                         "record (obs.StructuredLogger)")
     args = ap.parse_args()
+    log = obs.StructuredLogger("serve_lm", jsonl_path=args.log_jsonl)
 
     cfg = reduced(get_config(args.arch))
     mesh = make_local_mesh()
@@ -73,12 +78,16 @@ def main() -> int:
     if args.plan == "paged":
         paging = choose_paging(s_kv, args.page_size, args.hot_pages)
         plan = MemoryPlan(nc, nb, n_persist=nc, n_host=paging.n_cold)
-        print(f"[serve_lm] paged: {paging} "
-              f"(hot {paging.hot_window}/{s_kv} tokens, "
-              f"{paging.n_cold} cold pages -> host)")
+        log.info("plan",
+                 f"[serve_lm] paged: {paging} "
+                 f"(hot {paging.hot_window}/{s_kv} tokens, "
+                 f"{paging.n_cold} cold pages -> host)",
+                 plan="paged", hot_window=paging.hot_window,
+                 n_cold=paging.n_cold, s_kv=s_kv)
     else:
         plan = MemoryPlan(nc, nb, n_persist=nc)
-        print(f"[serve_lm] resident: full {s_kv}-token cache in HBM")
+        log.info("plan", f"[serve_lm] resident: full {s_kv}-token cache in HBM",
+                 plan="resident", s_kv=s_kv)
 
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     engine = DecodeEngine(
@@ -96,27 +105,35 @@ def main() -> int:
     engine.submit(build_requests(args.requests, cfg.vocab_size, args.max_new))
     report = engine.run()
     tok_s = report.generated_tokens / max(report.wall_s, 1e-9)
-    print(f"[serve_lm] served {len(report.finished)} requests, "
-          f"{report.generated_tokens} tokens in {report.steps} steps "
-          f"({report.prefill_ticks} prefill / {report.decode_ticks} decode, "
-          f"admission={report.admission}"
-          + (f", chunk={report.prefill_chunk}" if report.prefill_chunk else "")
-          + f"; {tok_s:.1f} tok/s, evictions={report.evictions}"
-          + ("" if report.drained else f", STOPPED with pending={report.pending}")
-          + ")")
-    print(f"[serve_lm] latency p50/p99 {report.p50_latency_s:.4f}/"
-          f"{report.p99_latency_s:.4f}s, TTFT p50/p99 {report.p50_ttft_s:.4f}/"
-          f"{report.p99_ttft_s:.4f}s, p99 ITL {report.p99_itl_s:.4f}s")
+    log.info("served",
+             f"[serve_lm] served {len(report.finished)} requests, "
+             f"{report.generated_tokens} tokens in {report.steps} steps "
+             f"({report.prefill_ticks} prefill / {report.decode_ticks} decode, "
+             f"admission={report.admission}"
+             + (f", chunk={report.prefill_chunk}" if report.prefill_chunk else "")
+             + f"; {tok_s:.1f} tok/s, evictions={report.evictions}"
+             + ("" if report.drained else f", STOPPED with pending={report.pending}")
+             + ")",
+             **report.to_dict())
+    log.info("latency",
+             f"[serve_lm] latency p50/p99 {report.p50_latency_s:.4f}/"
+             f"{report.p99_latency_s:.4f}s, TTFT p50/p99 {report.p50_ttft_s:.4f}/"
+             f"{report.p99_ttft_s:.4f}s, p99 ITL {report.p99_itl_s:.4f}s")
     for rid in sorted(report.finished):
         print(f"  req {rid}: {report.finished[rid]}")
     hbm_dev = report.hbm_cache_bytes / n_dev
     res_dev = report.resident_cache_bytes / n_dev
-    print(f"[serve_lm] per-device HBM cache: {hbm_dev / 1e6:.3f} MB "
-          f"(resident layout: {res_dev / 1e6:.3f} MB) "
-          f"-> reduction x{report.hbm_reduction:.2f}; "
-          f"host pages: {report.host_cache_bytes / n_dev / 1e6:.3f} MB/device")
+    log.info("memory",
+             f"[serve_lm] per-device HBM cache: {hbm_dev / 1e6:.3f} MB "
+             f"(resident layout: {res_dev / 1e6:.3f} MB) "
+             f"-> reduction x{report.hbm_reduction:.2f}; "
+             f"host pages: {report.host_cache_bytes / n_dev / 1e6:.3f} MB/device",
+             hbm_dev_bytes=int(hbm_dev), resident_dev_bytes=int(res_dev),
+             hbm_reduction=round(report.hbm_reduction, 2))
     if dev_args is not None:
-        print(f"[serve_lm] compiled per-device argument bytes: {dev_args / 1e6:.3f} MB")
+        log.info("compiled_memory",
+                 f"[serve_lm] compiled per-device argument bytes: "
+                 f"{dev_args / 1e6:.3f} MB", argument_bytes=int(dev_args))
     return 0
 
 

@@ -22,6 +22,7 @@ import shutil
 
 import jax
 
+from repro import obs
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.core.plan import MemoryPlan, fully_resident_plan
@@ -111,7 +112,11 @@ def main():
                          "scatter); off builds and prices the serial "
                          "schedule — the printed summary shows both modeled "
                          "step times either way")
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="also append every log line as a structured JSONL "
+                         "record (obs.StructuredLogger)")
     args = ap.parse_args()
+    log = obs.StructuredLogger("train_lm", jsonl_path=args.log_jsonl)
     if args.sync_mode is None:
         args.sync_mode = "xla" if args.plan == "resident" else "manual"
     if args.compress is None:
@@ -134,8 +139,11 @@ def main():
         adam=AdamConfig(lr=1e-3),
         lr_schedule=cosine_schedule(1e-3, warmup=20, total=args.steps),
     )
-    print(f"[train_lm] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
-          + plan_summary(cfg, shape, mesh, plan))
+    log.info("plan",
+             f"[train_lm] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+             + plan_summary(cfg, shape, mesh, plan),
+             arch=cfg.name, params_m=round(cfg.param_count() / 1e6, 1),
+             plan=plan.describe())
 
     shutil.rmtree(args.ckpt_dir, ignore_errors=True)
     mgr = CheckpointManager(args.ckpt_dir, keep=2)
@@ -144,21 +152,30 @@ def main():
         half = args.steps // 2
         pipe = SyntheticTokenPipeline(cfg, shape, seed=0)
         r1 = train_loop(art, pipe, mgr, LoopConfig(total_steps=half, checkpoint_every=25,
-                                                   log_every=25))
-        print(f"[train_lm] 'crash' after {r1.final_step} steps "
-              f"(loss {r1.losses[0]:.3f} -> {r1.losses[-1]:.3f}); restarting...")
+                                                   log_every=25), log=log)
+        log.info("crash",
+                 f"[train_lm] 'crash' after {r1.final_step} steps "
+                 f"(loss {r1.losses[0]:.3f} -> {r1.losses[-1]:.3f}); restarting...",
+                 step=r1.final_step, loss=round(float(r1.losses[-1]), 3))
         pipe2 = SyntheticTokenPipeline(cfg, shape, seed=0)
         r2 = train_loop(art, pipe2, mgr, LoopConfig(total_steps=args.steps,
-                                                    checkpoint_every=50, log_every=25))
+                                                    checkpoint_every=50, log_every=25),
+                        log=log)
         assert r2.resumed_from is not None, "resume failed"
-        print(f"[train_lm] resumed from step {r2.resumed_from}, "
-              f"final loss {r2.losses[-1]:.3f} (continued below {r1.losses[-1]:.3f})")
+        log.info("resumed",
+                 f"[train_lm] resumed from step {r2.resumed_from}, "
+                 f"final loss {r2.losses[-1]:.3f} (continued below {r1.losses[-1]:.3f})",
+                 resumed_from=r2.resumed_from,
+                 loss=round(float(r2.losses[-1]), 3))
     else:
         pipe = SyntheticTokenPipeline(cfg, shape, seed=0)
         res = train_loop(art, pipe, mgr, LoopConfig(total_steps=args.steps,
-                                                    checkpoint_every=100, log_every=20))
-        print(f"[train_lm] done: loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
-              f"over {res.steps_run} steps")
+                                                    checkpoint_every=100, log_every=20),
+                        log=log)
+        log.info("done",
+                 f"[train_lm] done: loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+                 f"over {res.steps_run} steps",
+                 steps=res.steps_run, loss=round(float(res.losses[-1]), 3))
 
 
 if __name__ == "__main__":

@@ -12,7 +12,6 @@ cells are skipped on re-run, so a crashed sweep resumes).
 """
 import argparse
 import json
-import time
 import traceback
 
 import jax
@@ -22,6 +21,7 @@ from repro.core import TPU_V5E, build_workload, search
 from repro.core.cost_model import serve_totals, step_totals
 from repro.core.plan import MemoryPlan
 from repro.core.serve_plan import serve_memory_estimate, serve_plan
+from repro import obs
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh, mesh_spec
 from repro.train.step_builder import build_decode_step, build_prefill_step, build_train_step
@@ -41,7 +41,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, sp: str = "off",
         "mesh": "multi" if multi_pod else "single",
         "mode": shape.mode, "sp": sp,
     }
-    t0 = time.time()
+    # one clock: the lower/compile timings come from obs spans (a disabled
+    # tracer still measures dur_s), so an installed telemetry handle sees
+    # the same regions the report records. The lower span brackets the
+    # whole mode-specific build+lower branch, so it is entered manually.
+    tracer = obs.current_telemetry().tracer
+    lower_span = tracer.span("dryrun.lower", arch=arch, shape=shape_name)
+    lower_span.__enter__()
 
     if shape.is_training:
         from repro.core import estimate_memory, estimate_runtime
@@ -105,10 +111,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, sp: str = "off",
             )
             model_flops = 2.0 * cfg.active_param_count() * shape.global_batch / mspec.n_chips
 
-    rec["lower_s"] = round(time.time() - t0, 1)
-    t0 = time.time()
-    compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 1)
+    lower_span.__exit__(None, None, None)
+    rec["lower_s"] = round(lower_span.dur_s, 1)
+    with tracer.span("dryrun.compile", arch=arch, shape=shape_name) as csp:
+        compiled = lowered.compile()
+    rec["compile_s"] = round(csp.dur_s, 1)
 
     mem = compiled.memory_analysis()
     rec["xla_memory"] = {

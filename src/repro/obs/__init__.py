@@ -1,0 +1,117 @@
+"""Runtime telemetry subsystem shared by training and serving.
+
+The paper's runtime profiler (§3.2) feeds its cost models with *measured*
+latency, memory, and I/O — this package is that measurement layer for the
+repo's runtime paths (the trace-time analogue lives in core/profiler.py):
+
+  * ``metrics``  — labeled counters / gauges / histograms with a snapshot-
+    to-dict registry (``MetricsRegistry``);
+  * ``trace``    — nestable wall-clock spans exporting JSONL and Chrome-
+    trace/Perfetto ``trace.json`` (``Tracer``);
+  * ``logging``  — structured logger: every human line is also a JSONL
+    record (``StructuredLogger``);
+  * ``mem``      — device-memory watermark (backend ``memory_stats()`` with
+    a live-array fallback);
+  * ``drift``    — online measured-vs-modeled monitor emitting
+    ``drift_report.json`` (``DriftMonitor``).
+
+``Telemetry`` bundles one registry + tracer + logger. Instrumented code
+resolves its handle through ``current_telemetry()`` — a module-level
+default in the tri-state style of ``dist.collectives.set_fused_quant`` —
+which returns the shared no-op ``NULL_TELEMETRY`` unless a caller installed
+one (``set_default_telemetry`` / ``use_telemetry``). Telemetry is therefore
+strictly opt-in: with none installed, instrumented paths execute no-op
+handles and **never change the jitted programs** (the HLO-identity is
+pinned by tests/test_obs.py).
+
+API walkthrough and the metric-name table: docs/observability.md.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs.drift import DriftMonitor
+from repro.obs.logging import StructuredLogger, as_logger
+from repro.obs.mem import device_memory_watermark
+from repro.obs.metrics import (
+    DOCUMENTED_METRICS,
+    NULL_REGISTRY,
+    MetricsRegistry,
+    quantile,
+)
+from repro.obs.trace import NULL_TRACER, Span, Tracer
+
+
+class Telemetry:
+    """One registry + tracer + logger, handed around as a unit.
+
+    ``Telemetry()`` is fully on; ``Telemetry(trace=False)`` keeps the
+    (cheap) registry while dropping span retention — what the decode engine
+    uses as its default bookkeeping; ``NULL_TELEMETRY`` is all-off.
+    """
+
+    def __init__(self, *, metrics: bool = True, trace: bool = True,
+                 logger: StructuredLogger | None = None, name: str = "repro"):
+        self.registry: MetricsRegistry = (
+            MetricsRegistry() if metrics else NULL_REGISTRY)
+        self.tracer: Tracer = Tracer(enabled=trace)
+        self.log: StructuredLogger = (
+            logger if logger is not None else StructuredLogger(name))
+        self.enabled = metrics or trace
+
+
+class _NullTelemetry(Telemetry):
+    def __init__(self):
+        self.registry = NULL_REGISTRY
+        self.tracer = NULL_TRACER
+        self.log = StructuredLogger("null", sink=None, min_level="error",
+                                    max_records=0)
+        self.enabled = False
+
+
+NULL_TELEMETRY = _NullTelemetry()
+
+_default: Telemetry | None = None
+
+
+def set_default_telemetry(tel: Telemetry | None) -> None:
+    """Install (or clear, with None) the process-wide telemetry handle
+    instrumented library code resolves via ``current_telemetry``."""
+    global _default
+    _default = tel
+
+
+def current_telemetry() -> Telemetry:
+    return _default if _default is not None else NULL_TELEMETRY
+
+
+@contextlib.contextmanager
+def use_telemetry(tel: Telemetry):
+    """Scoped ``set_default_telemetry`` (restores the previous handle)."""
+    global _default
+    prev = _default
+    _default = tel
+    try:
+        yield tel
+    finally:
+        _default = prev
+
+
+__all__ = [
+    "DOCUMENTED_METRICS",
+    "DriftMonitor",
+    "MetricsRegistry",
+    "NULL_REGISTRY",
+    "NULL_TELEMETRY",
+    "NULL_TRACER",
+    "Span",
+    "StructuredLogger",
+    "Telemetry",
+    "Tracer",
+    "as_logger",
+    "current_telemetry",
+    "device_memory_watermark",
+    "quantile",
+    "set_default_telemetry",
+    "use_telemetry",
+]

@@ -1,0 +1,94 @@
+"""Structured logging: every human-readable line is also a JSONL record.
+
+The training loop (and the example CLIs) used to log through a bare
+``Callable[[str], None]`` — good for eyes, opaque to machines. A
+``StructuredLogger`` keeps the human line byte-identical (it still goes to
+the configured ``sink``, default ``print``) while emitting a parallel
+machine-parseable record ``{"ts": ..., "level": ..., "logger": ...,
+"event": ..., **fields}`` that is retained in memory and, when a
+``jsonl_path`` is set, appended to disk as JSON Lines.
+
+Legacy call sites that pass a plain callable keep working:
+``as_logger(log)`` wraps it, so ``train_loop(log=print)`` and
+``train_loop(log=my_list.append)`` behave exactly as before — the callable
+becomes the human sink and the structured records ride alongside.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+LEVELS = ("debug", "info", "warning", "error")
+
+
+class StructuredLogger:
+    """``log(level, event, msg, **fields)`` -> human line + JSONL record.
+
+    ``sink`` receives the human-readable line (default ``print``); set it to
+    None to silence the human side (machine records still accumulate).
+    ``min_level`` filters both sides. Records are plain dicts in ``records``
+    (bounded by ``max_records``) and optionally appended to ``jsonl_path``.
+    """
+
+    def __init__(self, name: str, sink: Callable[[str], None] | None = print,
+                 jsonl_path: str | None = None, min_level: str = "debug",
+                 max_records: int = 1 << 16):
+        self.name = name
+        self.sink = sink
+        self.records: list[dict] = []
+        self.max_records = max_records
+        self._min = LEVELS.index(min_level)
+        self._file = None
+        if jsonl_path is not None:
+            os.makedirs(os.path.dirname(os.path.abspath(jsonl_path)),
+                        exist_ok=True)
+            self._file = open(jsonl_path, "a")
+
+    def log(self, level: str, event: str, msg: str | None = None,
+            **fields) -> None:
+        if LEVELS.index(level) < self._min:
+            return
+        rec = {"ts": time.time(), "level": level, "logger": self.name,
+               "event": event, **fields}
+        if msg is not None:
+            rec["msg"] = msg
+        if len(self.records) < self.max_records:
+            self.records.append(rec)
+        if self._file is not None:
+            self._file.write(json.dumps(rec, default=str) + "\n")
+            self._file.flush()
+        if self.sink is not None and msg is not None:
+            self.sink(msg)
+
+    def debug(self, event: str, msg: str | None = None, **fields) -> None:
+        self.log("debug", event, msg, **fields)
+
+    def info(self, event: str, msg: str | None = None, **fields) -> None:
+        self.log("info", event, msg, **fields)
+
+    def warning(self, event: str, msg: str | None = None, **fields) -> None:
+        self.log("warning", event, msg, **fields)
+
+    def error(self, event: str, msg: str | None = None, **fields) -> None:
+        self.log("error", event, msg, **fields)
+
+    # legacy surface: a StructuredLogger is itself a Callable[[str], None],
+    # so code that still does ``log(f"...")`` records an "info" event with
+    # the line as its message
+    def __call__(self, msg: str) -> None:
+        self.info("log", msg)
+
+    def close(self) -> None:
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+
+
+def as_logger(log, name: str = "loop") -> StructuredLogger:
+    """Adapt the legacy ``log`` plumbing: a StructuredLogger passes through,
+    any other callable becomes the human sink of a fresh one."""
+    if isinstance(log, StructuredLogger):
+        return log
+    return StructuredLogger(name, sink=log)

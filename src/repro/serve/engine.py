@@ -33,26 +33,18 @@ HBM-resident cache or the host-paged one.
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Any, Iterable, Iterator
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.plan import MemoryPlan
+from repro.obs.metrics import quantile as _quantile
 from repro.serve.paging import PagingSpec, cache_partition_bytes
 from repro.serve.scheduler import ContinuousScheduler, PagePool, Request
-
-
-def _quantile(values, q: float) -> float:
-    """Nearest-rank quantile; 0.0 on empty input."""
-    if not values:
-        return 0.0
-    xs = sorted(values)
-    idx = min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))
-    return xs[idx]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +109,34 @@ class EngineReport:
         admission inflates and chunked prefill bounds."""
         return _quantile(list(self.itl_s), 0.99)
 
+    def to_dict(self) -> dict:
+        """The flat JSON form load harnesses record per mode — field for
+        field (and rounding for rounding) what benchmarks/serve_load.py
+        writes into BENCH_serve.json, so callers stop re-deriving the
+        percentile math (the harness adds only the token checksum)."""
+        return {
+            "admission": self.admission,
+            "prefill_chunk": self.prefill_chunk,
+            "drained": self.drained,
+            "steps": self.steps,
+            "prefill_ticks": self.prefill_ticks,
+            "decode_ticks": self.decode_ticks,
+            "generated_tokens": self.generated_tokens,
+            "finished_requests": len(self.finished),
+            "evictions": self.evictions,
+            "truncated": len(self.truncated),
+            "rejected": len(self.rejected),
+            # wall-clock measurements (jitter run to run)
+            "wall_s": round(self.wall_s, 6),
+            "tokens_per_s": round(
+                self.generated_tokens / max(self.wall_s, 1e-9), 3),
+            "p50_latency_s": round(self.p50_latency_s, 6),
+            "p99_latency_s": round(self.p99_latency_s, 6),
+            "p50_ttft_s": round(self.p50_ttft_s, 6),
+            "p99_ttft_s": round(self.p99_ttft_s, 6),
+            "p99_itl_s": round(self.p99_itl_s, 6),
+        }
+
 
 def _zero_slots(cache, mask: jax.Array):
     """Zero every cache leaf's rows for slots where ``mask`` is True.
@@ -156,11 +176,20 @@ class DecodeEngine:
         prefill_chunk: int | None = None,
         chunk_budget: int | None = 1,
         hw=None,
+        telemetry: obs.Telemetry | None = None,
     ):
         from repro.models import kvcache as KVC
         from repro.train import step_builder as SB
 
         self.cfg, self.shape, self.paging = cfg, shape, paging
+        # the engine's bookkeeping (tick counts, request counters, ITL) IS
+        # its metrics registry — EngineReport reads back out of it — so an
+        # engine without caller-provided telemetry still runs a real
+        # registry (cheap host-side dict), just with span retention off
+        tel = telemetry if telemetry is not None else obs.current_telemetry()
+        if not tel.enabled:
+            tel = obs.Telemetry(trace=False)
+        self.tel = tel
         if admission is None:
             admission = "replay" if cfg.attention_free else "chunked"
         assert admission in ("replay", "chunked", "whole"), admission
@@ -226,11 +255,37 @@ class DecodeEngine:
             # ring caches (SWA) and O(1)-state models decode past the cache
             # length by slot reuse; full attention runs out of slots there
             allow_wrap=bool(cfg.sliding_window) or cfg.attention_free,
+            registry=tel.registry,
         )
-        # request-level timing (wall clock) and tick accounting
-        self.ticks = 0
-        self.prefill_ticks = 0
-        self.decode_ticks = 0
+        # tick accounting lives in the registry (serve.ticks total plus the
+        # phase-labeled split); `ticks`/`prefill_ticks`/`decode_ticks` below
+        # are read-back properties over these counters
+        reg = tel.registry
+        self._c_ticks = reg.counter("serve.ticks")
+        self._c_prefill_ticks = reg.counter("serve.ticks", phase="prefill")
+        self._c_decode_ticks = reg.counter("serve.ticks", phase="decode")
+        self._c_gen = reg.counter("serve.generated_tokens")
+        self._h_itl = reg.histogram("serve.itl_s")
+        self._c_fetch = reg.counter("serve.page_fetches")
+        self._c_h2d = reg.counter("serve.h2d_bytes")
+        # paged decode moves cold pages over the host link *inside* the
+        # jitted step, so the traffic is priced statically (the same
+        # inventory the cost model's t_page_fetch uses) and accounted per
+        # decode tick
+        if paging is not None:
+            from repro.core.cost_model import (
+                _attn_layer_count, page_fetch_bytes_per_step)
+            from repro.core.hardware import MeshSpec
+
+            mspec = MeshSpec(tuple(mesh.devices.shape),
+                             tuple(mesh.axis_names))
+            self._h2d_per_tick = int(
+                page_fetch_bytes_per_step(cfg, shape, mspec, paging))
+            self._fetches_per_tick = paging.n_cold * _attn_layer_count(cfg)
+        else:
+            self._h2d_per_tick = 0
+            self._fetches_per_tick = 0
+        # request-level timing (wall clock)
         self._consec_prefill = 0
         self._t0: float | None = None
         self._t_submit: dict[int, float] = {}
@@ -239,6 +294,20 @@ class DecodeEngine:
         self._t_last_tok: dict[int, float] = {}
         self._gen_count: dict[int, int] = {}
         self._itl: list[float] = []
+
+    # -- registry-backed tick accounting --------------------------------------
+    # (writable only through the counters; the report is a view over them)
+    @property
+    def ticks(self) -> int:
+        return int(self._c_ticks.value)
+
+    @property
+    def prefill_ticks(self) -> int:
+        return int(self._c_prefill_ticks.value)
+
+    @property
+    def decode_ticks(self) -> int:
+        return int(self._c_decode_ticks.value)
 
     # -- request API ---------------------------------------------------------
     def warmup(self) -> None:
@@ -280,12 +349,14 @@ class DecodeEngine:
             self.state["cache"] = self._reset(self.state["cache"], mask)
         if (self._prefill is not None
                 and sched.should_prefill(self._consec_prefill, self.chunk_budget)):
-            self._prefill_tick()
+            with self.tel.tracer.span("serve.prefill_tick"):
+                self._prefill_tick()
             self._consec_prefill += 1
         else:
-            self._decode_tick()
+            with self.tel.tracer.span("serve.decode_tick"):
+                self._decode_tick()
             self._consec_prefill = 0
-        self.ticks += 1
+        self._c_ticks.inc()
         self._note_progress()
 
     # retained alias: one tick of the pre-redesign surface
@@ -346,7 +417,10 @@ class DecodeEngine:
         }
         self.state, nxt = self._step(self.state, batch)
         sched.advance([int(t) for t in jax.device_get(nxt)], active)
-        self.decode_ticks += 1
+        self._c_decode_ticks.inc()
+        if self._fetches_per_tick:
+            self._c_fetch.inc(self._fetches_per_tick)
+            self._c_h2d.inc(self._h2d_per_tick)
 
     def _prefill_tick(self) -> None:
         sched = self.scheduler
@@ -382,7 +456,7 @@ class DecodeEngine:
         }
         self.state, nxt = self._prefill(self.state, batch)
         sched.advance_prefill(n_tok, [int(t) for t in jax.device_get(nxt)])
-        self.prefill_ticks += 1
+        self._c_prefill_ticks.inc()
 
     # -- timing ---------------------------------------------------------------
     def _note_progress(self) -> None:
@@ -394,12 +468,15 @@ class DecodeEngine:
         for rid, n in counts.items():
             seen = self._gen_count.get(rid, 0)
             if n > seen:
+                self._c_gen.inc(n - seen)
                 if rid not in self._t_first and rid in self._t_submit:
                     self._t_first[rid] = now
                 if rid in self._t_last_tok:
                     # a gap per tick that produced tokens for this stream —
                     # the in-flight latency chunked prefill exists to bound
-                    self._itl.append(now - self._t_last_tok[rid])
+                    gap = now - self._t_last_tok[rid]
+                    self._itl.append(gap)
+                    self._h_itl.observe(gap)
                 self._t_last_tok[rid] = now
                 self._gen_count[rid] = n
             elif n < seen:

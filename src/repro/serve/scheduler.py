@@ -27,6 +27,8 @@ import dataclasses
 from collections import deque
 from typing import Iterable
 
+from repro.obs.metrics import NULL_REGISTRY
+
 
 @dataclasses.dataclass
 class Request:
@@ -112,7 +114,7 @@ class ContinuousScheduler:
     """
 
     def __init__(self, n_slots: int, pool: PagePool, page_size: int,
-                 cache_len: int, allow_wrap: bool = False):
+                 cache_len: int, allow_wrap: bool = False, registry=None):
         assert n_slots >= 1 and page_size >= 1
         self.n_slots = n_slots
         self.pool = pool
@@ -126,6 +128,21 @@ class ContinuousScheduler:
         self.finished: dict[int, list[int]] = {}
         self.rejected: dict[int, list[int]] = {}  # page demand > pool capacity
         self.evictions = 0
+        # telemetry (obs.MetricsRegistry or the no-op default): request
+        # lifecycle counters + PagePool occupancy gauges
+        reg = registry if registry is not None else NULL_REGISTRY
+        self._c_admitted = reg.counter("serve.admitted")
+        self._c_evictions = reg.counter("serve.evictions")
+        self._c_finished = reg.counter("serve.finished")
+        self._c_rejected = reg.counter("serve.rejected")
+        self._c_truncated = reg.counter("serve.truncated")
+        self._g_pool_free = reg.gauge("serve.pagepool_free")
+        self._g_pool_occ = reg.gauge("serve.pagepool_occupancy")
+
+    def _note_pool(self) -> None:
+        free = self.pool.n_free
+        self._g_pool_free.set(free)
+        self._g_pool_occ.set(1.0 - free / self.pool.n_pages)
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, requests: Iterable[Request]) -> None:
@@ -146,6 +163,9 @@ class ContinuousScheduler:
             req = self.queue.popleft()
             self.slots[b] = SlotState(req.rid, list(req.prompt), req.max_new_tokens)
             admitted.append(b)
+        if admitted:
+            self._c_admitted.inc(len(admitted))
+            self._note_pool()
         return admitted
 
     def _evict_youngest(self) -> bool:
@@ -159,6 +179,8 @@ class ContinuousScheduler:
         self.slots[b] = None
         self.queue.appendleft(Request(s.rid, s.prompt, s.max_new_tokens))
         self.evictions += 1
+        self._c_evictions.inc()
+        self._note_pool()
         return True
 
     # -- per-step interface ---------------------------------------------------
@@ -203,8 +225,10 @@ class ContinuousScheduler:
                 # b is the last runner and owns every page: its demand
                 # exceeds the pool outright — reject, don't livelock
                 self.rejected[s.rid] = list(s.generated)
+                self._c_rejected.inc()
                 self.pool.free_slot(b)
                 self.slots[b] = None
+        self._note_pool()
         return self.slots[b] is not None
 
     def _finish_or_grow(self, b: int) -> None:
@@ -215,10 +239,13 @@ class ContinuousScheduler:
         out_of_cache = s.length >= self.cache_len and not self.allow_wrap
         if s.done or out_of_cache:
             self.finished[s.rid] = list(s.generated)
+            self._c_finished.inc()
             if out_of_cache and not s.done:
                 self.truncated.add(s.rid)
+                self._c_truncated.inc()
             self.pool.free_slot(b)
             self.slots[b] = None
+            self._note_pool()
             return
         self.ensure_pages(b, s.length + 1)
 

@@ -490,6 +490,10 @@ def build_train_step(
     # sharded layout.
     tp_degree = SH.mesh_sizes(mesh).get("model", 1)
     strategy = SYNC.make_strategy(plan, mesh, tp_degree)
+    # telemetry (host-side, no-op without an installed handle): the step's
+    # static collective wire-byte inventory — collectives run inside jit, so
+    # this is recorded from the leaf specs, not counted at runtime
+    SYNC.record_sync_inventory(strategy, state_specs["params"], plan.microbatch)
     compress = plan.grad_compress
     ef_layout = strategy.ef_state(o_defs_one, g_shard)
     if ef_layout is not None:

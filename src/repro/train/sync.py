@@ -472,3 +472,59 @@ def make_strategy(plan, mesh, tp_degree: int) -> XlaSync | ManualSync:
     if math.prod(mesh.devices.shape) == 1:
         return XlaSync(plan, mesh)
     return ManualSync(plan, mesh, kind)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: static per-step wire-byte inventory
+# ---------------------------------------------------------------------------
+def record_sync_inventory(strategy, params_specs, microbatch: int,
+                          registry=None) -> dict[str, int]:
+    """Record the step's collective wire-byte inventory as gauges.
+
+    Collectives execute inside jit, so runtime counters cannot observe them
+    — the traced program runs the Python body exactly once. What *is* known
+    statically is the payload each strategy puts on the wire per step, and
+    that is what this records, from the parameter leaf specs:
+
+      * ``sync.wire_bytes_per_step{strategy=..., op=grad_sync}`` — the
+        gradient sync payload: every param leaf at the compression payload
+        width (1 B int8_ef / 2 B bf16 / 4 B fp32), once per step (sync
+        happens after microbatch accumulation).
+      * ``sync.wire_bytes_per_step{strategy=..., op=param_gather}`` — bf16
+        param-gather traffic of ZeRO kinds: zero2 gathers sharded leaves
+        once up front; zero3 re-gathers inside the scan every microbatch.
+      * ``sync.wire_payload{strategy=...}`` — the payload element width.
+
+    Logical payload bytes, not per-link ring traffic (multiply by
+    (n-1)/n per hop for that). Resolves the registry through
+    ``obs.current_telemetry()`` when not given; with none installed this
+    only builds the (small) returned dict.
+    """
+    from repro import obs
+
+    reg = registry if registry is not None else obs.current_telemetry().registry
+    kind = getattr(strategy, "kind", "xla")
+    compress = strategy.compress
+    itemsize = {"int8_ef": 1, "bf16": 2}.get(compress, 4)
+    axes = getattr(strategy, "axes", ())
+
+    grad_bytes = 0
+    gather_bytes = 0
+    for leaf in jax.tree.leaves(params_specs):
+        n = math.prod(leaf.shape)
+        grad_bytes += n * itemsize
+        if kind in ("zero2", "zero3"):
+            sh = getattr(leaf, "sharding", None)
+            if isinstance(sh, NamedSharding) and \
+                    SH.leaf_sync_dim(sh, axes) is not None:
+                gather_bytes += n * 2  # bf16 gather payload
+    if kind == "zero3":
+        gather_bytes *= microbatch
+    inv = {"grad_sync": grad_bytes, "param_gather": gather_bytes,
+           "payload_itemsize": itemsize}
+    reg.gauge("sync.wire_bytes_per_step", strategy=kind,
+              op="grad_sync").set(grad_bytes)
+    reg.gauge("sync.wire_bytes_per_step", strategy=kind,
+              op="param_gather").set(gather_bytes)
+    reg.gauge("sync.wire_payload", strategy=kind).set(itemsize)
+    return inv
